@@ -1,0 +1,27 @@
+"""Fig 17: KV-cache hit rates across workloads, GenTorrent vs no-HR-tree."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import SCALE, emit, save
+from benchmarks.serving_sim import run_serving_sim
+
+
+def main():
+    n_req = max(40, int(120 * SCALE))
+    rows = {}
+    t0 = time.perf_counter()
+    for wl in ("ToolUse", "Coding", "LongQA", "Mixed"):
+        w = run_serving_sim(wl, "full", 2.0, n_req, seed=3)
+        wo = run_serving_sim(wl, "none", 2.0, n_req, seed=3)
+        rows[wl] = {"gentorrent": w["token_hit_rate"],
+                    "no_hrtree": wo["token_hit_rate"]}
+    us = (time.perf_counter() - t0) * 1e6 / (len(rows) * 2)
+    save("fig17_cache_hit", rows)
+    emit("fig17_cache_hit_rates", us, rows)
+    assert rows["ToolUse"]["gentorrent"] >= rows["ToolUse"]["no_hrtree"]
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Fig 13: CDF of clove preparation (model-node side) and decryption
+(user-node side) latency.  Message sizes drawn from the ToolUse workload
+(the paper's setup)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import sida
+from repro.training.data import TOOLUSE, WorkloadGen
+
+from benchmarks.common import SCALE, emit, save
+
+
+def main():
+    trials = max(200, int(2_000 * SCALE))
+    g = WorkloadGen(TOOLUSE, seed=0, scale=0.25)
+    sizes = [len(g.sample().tokens) * 2 for _ in range(64)]  # ~bytes
+    prep, dec = [], []
+    for i in range(trials):
+        msg = bytes(np.random.default_rng(i).integers(
+            0, 256, sizes[i % len(sizes)], dtype=np.uint8))
+        t0 = time.perf_counter()
+        cloves = sida.make_cloves(msg, 4, 3)
+        prep.append((time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        out = sida.recover(cloves[:3])
+        dec.append((time.perf_counter() - t0) * 1e3)
+        assert out == msg
+    stats = {
+        "prepare_ms": {"mean": float(np.mean(prep)),
+                       "p50": float(np.percentile(prep, 50)),
+                       "p99": float(np.percentile(prep, 99))},
+        "decrypt_ms": {"mean": float(np.mean(dec)),
+                       "p50": float(np.percentile(dec, 50)),
+                       "p99": float(np.percentile(dec, 99))},
+        "success_rate": 1.0,
+        "paper": {"prepare_ms_mean": 0.273, "decrypt_ms_mean": 0.302},
+    }
+    save("fig13_clove_latency", {"trials": trials, **stats})
+    emit("fig13_clove_prepare", float(np.mean(prep)) * 1e3, stats)
+    return stats
+
+
+if __name__ == "__main__":
+    main()

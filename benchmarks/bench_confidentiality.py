@@ -1,0 +1,35 @@
+"""Fig 10: message confidentiality vs fraction of malicious nodes, with
+and without brute-force-capable adversaries."""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core.anonymity import confidentiality
+
+from benchmarks.common import SCALE, emit, save
+
+
+def main():
+    N = int(10_000 * max(SCALE, 0.05))
+    trials = max(50, int(400 * SCALE))
+    fracs = [0.01, 0.02, 0.05, 0.10]
+    rows = []
+    t0 = time.perf_counter()
+    for f in fracs:
+        rng = random.Random(7)
+        no_bf = confidentiality(N, f, n_paths=4, k=3, path_len=3,
+                                trials=trials, rng=rng, brute_force=False)
+        bf = confidentiality(N, f, n_paths=4, k=3, path_len=3,
+                             trials=trials, rng=rng, brute_force=True)
+        rows.append({"f": f, "no_bruteforce": round(no_bf, 4),
+                     "bruteforce": round(bf, 4)})
+    us = (time.perf_counter() - t0) * 1e6 / (len(fracs) * trials * 2)
+    save("fig10_confidentiality", {"N": N, "trials": trials, "rows": rows})
+    emit("fig10_confidentiality_trial", us,
+         {"rows": rows, "paper_f0.10_bf": 0.88})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Fig 11: normalized-perplexity credit scores of GT vs degraded models
+over a batch of challenge prompts."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.verification import VerifierModel, credibility
+
+from benchmarks.common import SCALE, emit, save
+from benchmarks.gt_model import greedy, impostors, trained_gt
+
+
+def main():
+    cfg, model, params, corpus = trained_gt()
+    verifier = VerifierModel(cfg, model, params)
+    models = {"GT": params, **impostors(params)}
+    n_prompts = max(6, int(30 * SCALE))
+    rng = np.random.default_rng(0)
+    scores = {k: [] for k in models}
+    t0 = time.perf_counter()
+    for i in range(n_prompts):
+        prompt = corpus.sample(1, 16, rng)[0, :16].tolist()
+        for name, p in models.items():
+            resp = greedy(model, p, prompt, n=16)
+            scores[name].append(credibility(verifier, prompt, resp))
+    us = (time.perf_counter() - t0) * 1e6 / (n_prompts * len(models))
+    stats = {k: {"mean": float(np.mean(v)), "std": float(np.std(v))}
+             for k, v in scores.items()}
+    save("fig11_credit_scores", {"n_prompts": n_prompts, "stats": stats,
+                                 "scores": scores})
+    emit("fig11_credit_per_challenge", us, stats)
+    assert stats["GT"]["mean"] >= max(
+        stats[m]["mean"] for m in ("m1", "m2", "m3", "m4")), \
+        "GT must score highest (paper Fig 11)"
+    return stats
+
+
+if __name__ == "__main__":
+    main()

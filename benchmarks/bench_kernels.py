@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks: jnp reference path wall time on CPU (the
+Pallas kernels themselves are TPU-targeted; interpret mode is a
+correctness tool, not a perf number) + HR-tree ops throughput."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hrtree
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.serving.prefix_cache import PrefixCache
+
+from benchmarks.common import emit, timeit
+
+
+def main():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (1, 8, 512, 64), jnp.float32)
+    kv = jax.random.normal(k2, (1, 4, 512, 64), jnp.float32)
+    us, _ = timeit(lambda: jax.block_until_ready(
+        flash_attention(q, kv, kv, impl="ref")))
+    emit("flash_attention_ref_512", us, {"shape": "B1 H8 S512 D64"})
+
+    qd = jax.random.normal(k3, (4, 8, 64), jnp.float32)
+    kvd = jax.random.normal(k2, (4, 4, 2048, 64), jnp.float32)
+    lengths = jnp.full((4,), 2048, jnp.int32)
+    us, _ = timeit(lambda: jax.block_until_ready(
+        decode_attention(qd, kvd, kvd, lengths, impl="ref")))
+    emit("decode_attention_ref_2k", us, {"shape": "B4 H8 S2048 D64"})
+
+    # HR-tree: preprocess + search throughput on 8k-token prompts
+    t = hrtree.HRTree([64], bits=8, default_chunk=64)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 50_000, 8192).tolist() for _ in range(16)]
+    for p in prompts:
+        t.insert_tokens(p, "self")
+    t0 = time.perf_counter()
+    for p in prompts * 4:
+        t.search_tokens(p, tau=2)
+    us = (time.perf_counter() - t0) / (len(prompts) * 4) * 1e6
+    emit("hrtree_search_8k_tokens", us, {"tree_nodes": t.size()})
+
+    pc = PrefixCache()
+    for p in prompts:
+        pc.insert(p, None, 1000)
+    t0 = time.perf_counter()
+    for p in prompts * 4:
+        pc.match(p)
+    us = (time.perf_counter() - t0) / (len(prompts) * 4) * 1e6
+    emit("prefix_cache_match_8k", us, {"hit_rate": pc.hit_rate})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Fig 12: reputation trajectories over 35 epochs under punishment levels
+gamma in {1, 1/3, 1/5} for GT + four degraded models."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.reputation import ReputationConfig, ReputationTracker
+from repro.core.verification import VerifierModel, credibility
+
+from benchmarks.common import SCALE, emit, save
+from benchmarks.gt_model import greedy, impostors, trained_gt
+
+
+def main():
+    cfg, model, params, corpus = trained_gt()
+    verifier = VerifierModel(cfg, model, params)
+    models = {"GT": params, **impostors(params)}
+    epochs = 35
+    challenges_per_epoch = max(1, int(2 * SCALE))
+    rng = np.random.default_rng(1)
+
+    # precompute per-epoch C(T) for each model
+    t0 = time.perf_counter()
+    c_series = {k: [] for k in models}
+    for e in range(epochs):
+        prompts = [corpus.sample(1, 16, rng)[0, :16].tolist()
+                   for _ in range(challenges_per_epoch)]
+        for name, p in models.items():
+            vals = [credibility(verifier, pr, greedy(model, p, pr, n=12))
+                    for pr in prompts]
+            c_series[name].append(float(np.mean(vals)))
+    gammas = {"level1_gamma=1": 1.0, "level2_gamma=1/3": 1 / 3,
+              "level3_gamma=1/5": 1 / 5}
+    # tau_abnormal rescaled to this GT model's score regime (GT ~0.55);
+    # the paper likewise picked its threshold empirically for its stack
+    out = {}
+    for gname, gamma in gammas.items():
+        trackers = {k: ReputationTracker(
+            ReputationConfig(gamma=gamma, tau_abnormal=0.47))
+                    for k in models}
+        traj = {k: [] for k in models}
+        for e in range(epochs):
+            for k in models:
+                traj[k].append(round(trackers[k].update(k, c_series[k][e]), 4))
+        out[gname] = traj
+    us = (time.perf_counter() - t0) * 1e6 / (epochs * len(models))
+    finals = {g: {k: v[-1] for k, v in t.items()} for g, t in out.items()}
+    save("fig12_reputation", {"trajectories": out, "c_series": c_series,
+                              "finals": finals})
+    emit("fig12_reputation_epoch", us, finals)
+    # paper finding: gamma=1/5 detects dishonest models fastest (< 0.4)
+    worst = min(out["level3_gamma=1/5"][m][-1]
+                for m in ("m2", "m3"))
+    assert worst < 0.4, "harsh impostors must end untrusted at gamma=1/5"
+    return out
+
+
+if __name__ == "__main__":
+    main()

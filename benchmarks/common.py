@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: timing, CSV emission, result persistence."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+RESULTS = Path(os.environ.get("BENCH_OUT", "results/bench"))
+SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))  # <1 = faster smoke
+
+
+def emit(name: str, us_per_call: float, derived: dict | None = None):
+    """The harness contract: ``name,us_per_call,derived`` CSV lines."""
+    print(f"{name},{us_per_call:.3f},{json.dumps(derived or {}, default=str)}")
+
+
+def save(name: str, payload: dict):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(
+        json.dumps(payload, indent=1, default=str))
+
+
+def timeit(fn, *args, repeats=5, warmup=1, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return dt * 1e6, out  # us

@@ -1,0 +1,89 @@
+"""Shared ground-truth model for the verification benchmarks (Figs 11/12,
+§5.4): a tiny LM trained on the structured Markov corpus, plus the four
+degraded impostors of §4.3:
+
+  GT  trained model (stands in for Meta-Llama-3.1-8B-Instruct-Q4_0)
+  m1  mild weight quantization        (Llama-3.2-3B-Q4_K_M stand-in)
+  m2  harsh weight quantization       (Llama-3.2-1B-Q4_K_M)
+  m3  harsh quantization + noise      (Llama-3.2-1B-Q4_K_S)
+  m4  mild quantization + noise       (Llama-3.2-3B-Q4_K_S)
+
+The stand-ins reproduce the *ordering* GT > m1/m4 > m2/m3 that drives the
+paper's credit-score separation; the absolute models differ (CPU-only
+container — DESIGN.md substitutions).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models.lm import build_model
+from repro.training import optimizer as opt_lib
+from repro.training.data import MarkovCorpus
+from repro.training.train_step import make_train_step
+
+
+@functools.lru_cache(maxsize=1)
+def trained_gt(steps: int = 150):
+    cfg = base.get_config("gentorrent-llama3-8b").reduced()
+    cfg = dataclasses.replace(cfg, vocab=256, d_model=96, d_head=24)
+    model = build_model(cfg)
+    adamw = opt_lib.AdamWConfig(lr=5e-3, warmup_steps=10, total_steps=steps)
+    step = jax.jit(make_train_step(cfg, model, adamw, block_q=32))
+    params = model.init(jax.random.PRNGKey(0))
+    opt = opt_lib.init_state(params)
+    corpus = MarkovCorpus(cfg.vocab, seed=0, branching=2, noise=0.02)
+    for b in corpus.batches(16, 48, steps):
+        params, opt, _ = step(params, opt,
+                              {k: jnp.asarray(v) for k, v in b.items()})
+    return cfg, model, params, corpus
+
+
+def _quantize(params, levels, noise=0.0, seed=1):
+    key = jax.random.PRNGKey(seed)
+
+    def q(x):
+        if x.ndim < 2:
+            return x
+        s = jnp.max(jnp.abs(x)) + 1e-9
+        y = jnp.round(x / s * levels) / levels * s
+        if noise:
+            nonlocal key
+            key, k2 = jax.random.split(key)
+            y = y + noise * s * jax.random.normal(k2, y.shape)
+        return y
+    return jax.tree.map(q, params)
+
+
+def impostors(params):
+    """Degradation ladder: m1/m4 mild (3B-class stand-ins), m2/m3 harsh
+    (1B-class).  Calibrated so the mild pair sits near the abnormal
+    threshold and the harsh pair well below it (paper Fig 11/12)."""
+    return {
+        "m1": _quantize(params, levels=4, noise=0.02),
+        "m2": _quantize(params, levels=2, noise=0.10),
+        "m3": _quantize(params, levels=1, noise=0.08),
+        "m4": _quantize(params, levels=4, noise=0.04),
+    }
+
+
+def greedy(model, params, prompt, n=16):
+    toks = list(prompt)
+    logits, cache = jax.jit(
+        lambda p, t: model.prefill(p, t, max_len=len(toks) + n + 2,
+                                   block_q=16))(
+        params, jnp.asarray([toks], jnp.int32))
+    dec = jax.jit(model.decode)
+    out = []
+    pos = len(toks)
+    for _ in range(n):
+        nxt = int(jnp.argmax(logits[0]))
+        out.append(nxt)
+        logits, cache = dec(params, cache, jnp.asarray([[nxt]], jnp.int32),
+                            jnp.asarray([pos], jnp.int32))
+        pos += 1
+    return out

@@ -1,0 +1,49 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines; JSON artifacts land in
+results/bench/.  BENCH_SCALE=0.2 shrinks trial counts for smoke runs.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_anonymity, bench_cache_hit,
+                            bench_churn, bench_clove_latency,
+                            bench_confidentiality, bench_credit,
+                            bench_kernels, bench_reputation,
+                            bench_roofline, bench_serving_latency,
+                            bench_throughput, bench_verification)
+    suites = [
+        ("fig9_anonymity", bench_anonymity.main),
+        ("fig10_confidentiality", bench_confidentiality.main),
+        ("fig11_credit", bench_credit.main),
+        ("fig12_reputation", bench_reputation.main),
+        ("fig13_clove_latency", bench_clove_latency.main),
+        ("fig14_churn", bench_churn.main),
+        ("fig15_16_serving_latency", bench_serving_latency.main),
+        ("fig17_cache_hit", bench_cache_hit.main),
+        ("fig18_throughput", bench_throughput.main),
+        ("sec5.4_verification", bench_verification.main),
+        ("kernels", bench_kernels.main),
+        ("roofline", bench_roofline.main),
+    ]
+    failures = []
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {name}: done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            print(f"# {name}: FAILED\n{traceback.format_exc()}",
+                  file=sys.stderr, flush=True)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

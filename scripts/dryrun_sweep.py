@@ -1,0 +1,69 @@
+"""Sequential dry-run sweep: every (arch x shape x mesh) cell in its own
+subprocess (fresh XLA state, resumable — cells with an existing JSON are
+skipped unless FORCE=1)."""
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ARCHS = [
+    "whisper-base", "xlstm-1.3b", "h2o-danube-1.8b", "gentorrent-llama3-8b",
+    "gemma2-9b", "llama-3.2-vision-11b", "moonshot-v1-16b-a3b", "granite-20b",
+    "yi-34b", "jamba-v0.1-52b", "dbrx-132b",
+]
+SHAPES = ["train_4k", "decode_32k", "prefill_32k", "long_500k"]
+OUT = Path("results/dryrun")
+LOG = Path("results/dryrun/sweep.log")
+
+
+def log(msg):
+    line = f"[{time.strftime('%H:%M:%S')}] {msg}"
+    print(line, flush=True)
+    LOG.parent.mkdir(parents=True, exist_ok=True)
+    with LOG.open("a") as f:
+        f.write(line + "\n")
+
+
+def main():
+    force = os.environ.get("FORCE") == "1"
+    cells = [(a, s, mp) for mp in (False, True) for a in ARCHS
+             for s in SHAPES]
+    t_all = time.time()
+    for i, (arch, shape, mp) in enumerate(cells):
+        mesh = "pod2x16x16" if mp else "pod16x16"
+        out = OUT / mesh / f"{arch}_{shape}.json"
+        if out.exists() and not force:
+            st = json.loads(out.read_text()).get("status")
+            if st in ("ok", "skipped"):
+                continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", str(OUT)]
+        if mp:
+            cmd.append("--multi-pod")
+        if force:
+            cmd.append("--force")
+        t0 = time.time()
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=3000,
+                               env={**os.environ, "PYTHONPATH": "src"})
+            status = "?"
+            if out.exists():
+                status = json.loads(out.read_text()).get("status")
+            log(f"{i+1}/{len(cells)} {mesh} {arch} {shape}: {status} "
+                f"({time.time()-t0:.0f}s)")
+            if status == "error":
+                err = json.loads(out.read_text()).get("error", "")
+                log(f"   ERROR: {err[:200]}")
+        except subprocess.TimeoutExpired:
+            log(f"{i+1}/{len(cells)} {mesh} {arch} {shape}: TIMEOUT")
+            out.write_text(json.dumps({
+                "arch": arch, "shape": shape, "mesh": mesh,
+                "status": "error", "error": "compile timeout (3000s)"}))
+    log(f"sweep done in {(time.time()-t_all)/60:.1f} min")
+
+
+if __name__ == "__main__":
+    main()

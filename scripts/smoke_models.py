@@ -1,0 +1,46 @@
+import sys
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models.lm import build_model, lm_loss
+
+names = sys.argv[1:] or base.list_configs()
+for name in names:
+    cfg = base.get_config(name).reduced()
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    B, S = 2, 24
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    aux = {}
+    if cfg.is_encdec:
+        aux["frames"] = jax.random.normal(jax.random.PRNGKey(2),
+                                          (B, S // 2, cfg.d_model), cfg.compute_dtype)
+    if cfg.n_image_tokens:
+        aux["image_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.n_image_tokens, cfg.d_model), cfg.compute_dtype)
+    logits = model.apply(params, tokens, aux=aux, block_q=8)
+    assert logits.shape == (B, S, cfg.vocab), logits.shape
+    assert not np.any(np.isnan(np.asarray(logits))), f"{name}: NaN in apply"
+    # prefill + decode agreement with full forward
+    pre_logits, cache = model.prefill(params, tokens[:, :S - 2], aux=aux,
+                                      max_len=S + 4, block_q=8)
+    assert not np.any(np.isnan(np.asarray(pre_logits)))
+    np.testing.assert_allclose(np.asarray(pre_logits),
+                               np.asarray(logits[:, S - 3]), rtol=2e-2, atol=2e-2)
+    lg = pre_logits
+    for t in range(S - 2, S):
+        lg, cache = model.decode(params, cache, tokens[:, t:t + 1],
+                                 jnp.full((B,), t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[:, t]),
+                                   rtol=2e-2, atol=2e-2)
+    # one loss/grad step
+    loss, metrics = lm_loss(cfg, model, params, tokens,
+                            jnp.where(tokens > 3, tokens, -1), aux=aux,
+                            block_q=8)
+    assert np.isfinite(float(loss)), name
+    print(f"OK {name:26s} params={n:>9,} loss={float(loss):.3f}")
+print("ALL OK")

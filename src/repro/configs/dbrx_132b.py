@@ -1,0 +1,21 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained [hf:databricks/dbrx-base; unverified].
+
+40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352, MoE 16e top-4.
+long_500k SKIPPED (full attention).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, MoESpec, register
+
+CONFIG = register(ArchConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    vocab=100352,
+    pattern=(LayerSpec(mixer="attn", ffn="moe"),),
+    moe=MoESpec(num_experts=16, top_k=4, d_ff_expert=10752, num_shared=0),
+    rope_theta=500_000.0,
+    source="hf:databricks/dbrx-base; unverified",
+))

@@ -1,0 +1,33 @@
+"""gemma2-9b [dense] — local+global alternating, logit softcap [arXiv:2408.00118; hf].
+
+42L d_model=3584 16H (GQA kv=8) d_ff=14336 vocab=256000.  Alternating
+local(4096-window)/global attention, attn softcap 50, final softcap 30,
+GeGLU, tied embeddings scaled by sqrt(d_model), double (sandwich) norms.
+long_500k SKIPPED: global layers are full attention.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+_pattern = (LayerSpec(mixer="attn", window=4096, ffn="dense"),
+            LayerSpec(mixer="attn", window=None, ffn="dense"))
+
+CONFIG = register(ArchConfig(
+    name="gemma2-9b",
+    family="dense",
+    n_layers=42,
+    d_model=3584,
+    n_heads=16,
+    n_kv_heads=8,
+    d_head=256,
+    d_ff=14336,
+    vocab=256_000,
+    pattern=_pattern,
+    rope_theta=10_000.0,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    act="gelu",
+    glu=True,
+    tie_embeddings=True,
+    embed_scale=True,
+    double_norm=True,
+    source="arXiv:2408.00118; hf",
+))

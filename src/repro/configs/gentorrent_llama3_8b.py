@@ -1,0 +1,21 @@
+"""The paper's own testbed model: Meta-Llama-3-8B (GenTorrent §5.1).
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256.  Used by the
+serving benchmarks (as the reduced-config engine model) and as an extra
+dry-run subject.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(ArchConfig(
+    name="gentorrent-llama3-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=128256,
+    pattern=(LayerSpec(mixer="attn"),),
+    rope_theta=500_000.0,
+    source="paper §5.1 testbed (Meta-Llama-3-8B)",
+))

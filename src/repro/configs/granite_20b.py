@@ -1,0 +1,21 @@
+"""granite-20b [dense] — llama-arch, code [arXiv:2405.04324; hf].
+
+52L d_model=6144 48H (GQA kv=1, i.e. MQA) d_ff=24576 vocab=49152.
+long_500k SKIPPED (full attention).  Under TP the single KV head is
+replicated across the model axis (see distributed/sharding.py).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(ArchConfig(
+    name="granite-20b",
+    family="dense",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab=49152,
+    pattern=(LayerSpec(mixer="attn"),),
+    rope_theta=10_000.0,
+    source="arXiv:2405.04324; hf",
+))

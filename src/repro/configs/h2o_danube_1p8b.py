@@ -1,0 +1,21 @@
+"""h2o-danube-1.8b [dense] — llama+mistral mix, SWA [arXiv:2401.16818; hf].
+
+24L d_model=2560 32H (GQA kv=8) d_ff=6912 vocab=32000.  Sliding-window
+attention (mistral-style, window 4096) on all layers ⇒ ring-buffer KV ⇒
+long_500k RUNS with O(window) decode state.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(ArchConfig(
+    name="h2o-danube-1.8b",
+    family="dense",
+    n_layers=24,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6912,
+    vocab=32_000,
+    pattern=(LayerSpec(mixer="attn", window=4096),),
+    rope_theta=10_000.0,
+    source="arXiv:2401.16818; hf",
+))

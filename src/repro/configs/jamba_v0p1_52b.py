@@ -1,0 +1,36 @@
+"""jamba-v0.1-52b [hybrid] — Mamba+attn 1:7 interleave, MoE [arXiv:2403.19887; hf].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536, MoE 16e top-2.
+Repeating 8-layer block: attention at position 4, Mamba elsewhere (1:7);
+MoE on odd positions, dense FFN on even (every-other-layer MoE, as in the
+Jamba paper).  Mamba: d_state=16, d_conv=4, expand=2.
+Hybrid ⇒ long_500k RUNS (4 full-attn layers of 32; KV for those shards
+over the data axis — context parallelism).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, MambaSpec, MoESpec, register
+
+
+def _pos(i: int) -> LayerSpec:
+    mixer = "attn" if i == 4 else "mamba"
+    ffn = "moe" if i % 2 == 1 else "dense"
+    return LayerSpec(mixer=mixer, ffn=ffn)
+
+
+_pattern = tuple(_pos(i) for i in range(8))
+
+CONFIG = register(ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=65536,
+    pattern=_pattern,
+    moe=MoESpec(num_experts=16, top_k=2, d_ff_expert=14336, num_shared=0),
+    mamba=MambaSpec(d_state=16, d_conv=4, expand=2, chunk=128),
+    long_context_ok=True,   # hybrid: 4 attn layers' KV shards over 'data'
+    rope_theta=10_000.0,
+    source="arXiv:2403.19887; hf",
+))

@@ -1,0 +1,28 @@
+"""llama-3.2-vision-11b [vlm] — cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+
+40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256.  Pattern of 5:
+four self-attention layers + one image cross-attention layer (8 cross
+layers across 40).  The vision frontend is a STUB: ``input_specs``
+supplies precomputed patch embeddings (B, 1600, d_model).
+long_500k SKIPPED (full attention).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+_pattern = tuple([LayerSpec(mixer="attn")] * 4 +
+                 [LayerSpec(mixer="cross_attn")])
+
+CONFIG = register(ArchConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=128256,
+    pattern=_pattern,
+    rope_theta=500_000.0,
+    n_image_tokens=1600,
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+))

@@ -1,0 +1,23 @@
+"""moonshot-v1-16b-a3b [moe] — kimi/moonlight, 64e top-6
+[hf:moonshotai/Moonlight-16B-A3B; hf].
+
+48L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=163840, MoE 64 experts
+top-6, fine-grained experts (d_ff_expert=1408) + 2 shared experts
+(Moonlight/DeepSeek-V3 style).  long_500k SKIPPED (full attention).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, MoESpec, register
+
+CONFIG = register(ArchConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=163840,
+    pattern=(LayerSpec(mixer="attn", ffn="moe"),),
+    moe=MoESpec(num_experts=64, top_k=6, d_ff_expert=1408, num_shared=2),
+    rope_theta=50_000.0,
+    source="hf:moonshotai/Moonlight-16B-A3B; hf",
+))

@@ -1,0 +1,35 @@
+"""whisper-base [audio] — enc-dec, conv frontend (stub) [arXiv:2212.04356; unverified].
+
+6L d_model=512 8H (kv=8) d_ff=2048 vocab=51865.  Interpreted as the
+whisper-base 6-layer encoder + 6-layer decoder (the published whisper-base).
+The conv1d mel frontend is a STUB: ``input_specs`` supplies precomputed
+frame embeddings (B, frames, d_model) with frames = seq_len // 2 (the conv
+stack's 2x downsampling).  Decoder: causal self-attn + cross-attn to the
+encoder output.  LayerNorm + plain GELU FFN (no GLU), learned positions.
+long_500k SKIPPED (full attention).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+# one whisper decoder layer == self-attn + cross-attn + a single FFN
+_pattern = (LayerSpec(mixer="attn", ffn="none"),
+            LayerSpec(mixer="cross_attn", ffn="dense"))
+
+CONFIG = register(ArchConfig(
+    name="whisper-base",
+    family="audio",
+    n_layers=12,            # decoder: 6 x (self-attn + cross-attn) positions
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=51865,
+    pattern=_pattern,
+    is_encdec=True,
+    n_enc_layers=6,
+    act="gelu",
+    glu=False,
+    norm="ln",
+    rope_theta=0.0,         # 0 => learned/sinusoidal absolute positions
+    tie_embeddings=True,
+    source="arXiv:2212.04356; unverified",
+))

@@ -1,0 +1,27 @@
+"""xlstm-1.3b [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+48L d_model=2048 4H (GQA kv=4) d_ff=0 vocab=50304.  d_ff=0 ⇒ xLSTM-style
+blocks with internal up/down projections, no separate FFN.  Ratio 7:1
+mLSTM:sLSTM (xLSTM[7:1]): repeating 8-layer block with sLSTM at position 7.
+Recurrent state ⇒ long_500k runs with O(1) decode state.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, XLSTMSpec, register
+
+_pattern = tuple([LayerSpec(mixer="mlstm", ffn="none")] * 7 +
+                 [LayerSpec(mixer="slstm", ffn="none")])
+
+CONFIG = register(ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    pattern=_pattern,
+    xlstm=XLSTMSpec(proj_factor_mlstm=2.0, proj_factor_slstm=4.0 / 3.0,
+                    conv_width=4),
+    tie_embeddings=True,
+    source="arXiv:2405.04517; unverified",
+))

@@ -1,0 +1,21 @@
+"""yi-34b [dense] — llama-arch GQA [arXiv:2403.04652; hf].
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+long_500k SKIPPED (full attention).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(ArchConfig(
+    name="yi-34b",
+    family="dense",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab=64_000,
+    pattern=(LayerSpec(mixer="attn"),),
+    rope_theta=5_000_000.0,
+    head_pad=8,   # 56 -> 64 padded heads: shardable by the 16-way TP axis
+    source="arXiv:2403.04652; hf",
+))

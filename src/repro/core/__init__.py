@@ -1,0 +1,7 @@
+"""GenTorrent/PlanetServe core: the paper's four contributions.
+
+  anonymity overlay   sida, onion, ed25519, chacha, shamir, ida, gf256
+  overlay forwarding  hrtree, sentry, forwarding
+  verification        verification (JAX PPL), reputation, consensus, vrf
+  metrics             anonymity
+"""

@@ -1,0 +1,67 @@
+"""Overlay forwarding decision (Algorithm 2) + relative-load balancing.
+
+Executed by EVERY model node on receiving a user request: search the
+HR-tree; on a match, filter holders above the load threshold and pick the
+least (relatively) loaded; on a miss (or all holders overloaded), fall back
+to global least-relative-load.  Relative load = active requests / hardware
+score (1..10), per §3.3.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+
+@dataclass
+class PeerInfo:
+    node_id: object
+    hw_score: float = 5.0          # 1..10 hardware capacity score
+    active_requests: int = 0
+    latency_ms: float = 0.0
+    kv_usage: float = 0.0
+
+    @property
+    def relative_load(self) -> float:
+        return self.active_requests / max(self.hw_score, 1e-6)
+
+
+@dataclass
+class ForwardingConfig:
+    tau_match: int = 2             # min HR-tree depth for a cache match
+    load_threshold: float = 4.0    # max relative load for cache-affinity pick
+    bits: int = 8
+
+
+@dataclass
+class Decision:
+    target: object
+    reason: str                    # "cache_hit" | "load_balance" | "self"
+    depth: int = 0
+    candidates: tuple = ()
+
+
+def _tiebreak(node_id, tokens) -> int:
+    """Per-request pseudo-random tiebreak: equal-load nodes would otherwise
+    herd onto one member between state-sync ticks."""
+    import zlib
+    return zlib.crc32(f"{node_id}|{list(tokens[:8])}".encode())
+
+
+def decide(cfg: ForwardingConfig, hrtree, peers: dict, tokens,
+           self_id=None) -> Decision:
+    """peers: {node_id: PeerInfo} for the whole group (state sync view)."""
+    holders, depth = hrtree.search_tokens(tokens, cfg.tau_match)
+    live = {nid: p for nid, p in peers.items()}
+    if holders:
+        cands = [live[h] for h in holders if h in live]
+        cands = [p for p in cands if p.relative_load <= cfg.load_threshold]
+        if cands:
+            best = min(cands, key=lambda p: (p.relative_load, p.latency_ms,
+                                             _tiebreak(p.node_id, tokens)))
+            return Decision(best.node_id, "cache_hit", depth,
+                            tuple(p.node_id for p in cands))
+    if not live:
+        return Decision(self_id, "self", depth)
+    best = min(live.values(), key=lambda p: (p.relative_load, p.latency_ms,
+                                             _tiebreak(p.node_id, tokens)))
+    return Decision(best.node_id, "load_balance", depth)

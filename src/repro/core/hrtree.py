@@ -1,0 +1,167 @@
+"""Hash-Radix tree (HR-tree): the decentralized KV-cache index (§3.3).
+
+Cuckoo-filter-inspired: tree nodes store *b-bit hashes* of variable-length
+token chunks instead of the chunks themselves, so the aggregated KV-cache
+state of every model node in a group fits in a compact structure that is
+cheap to synchronize (each node periodically broadcasts its local subtree
+as a list of hash paths).
+
+Search (Algorithm 1): preprocess the prompt into chunk hashes using the
+group's chunk-length array L (from the Sentry module), walk children by
+hash, return (model-node pointers at the deepest matched node, depth d).
+A match requires d >= tau_c; false-positive rate is (1/2^b)^d.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Iterable, Optional, Sequence
+
+# polynomial rolling hash over token ids (mirrored by kernels/chunk_hash)
+_HASH_MULT = 1_000_003
+_HASH_SEED = 0x9E3779B9
+
+
+def chunk_hash(tokens: Sequence[int], bits: int = 8,
+               seed: int = _HASH_SEED) -> int:
+    h = seed
+    for t in tokens:
+        h = (h * _HASH_MULT + int(t) + 1) & 0xFFFFFFFF
+    # xor-fold 32 -> bits
+    out = 0
+    x = h
+    while x:
+        out ^= x & ((1 << bits) - 1)
+        x >>= bits
+    return out
+
+
+def preprocess(tokens: Sequence[int], lengths: Sequence[int],
+               bits: int = 8, default_chunk: int = 64) -> list[int]:
+    """Variable-length chunking per L, then default_chunk for the tail."""
+    hashes = []
+    pos = 0
+    n = len(tokens)
+    for ln in lengths:
+        if pos >= n or ln <= 0:
+            break
+        if pos + ln > n:
+            break  # partial chunk: stop (prefix semantics)
+        hashes.append(chunk_hash(tokens[pos:pos + ln], bits))
+        pos += ln
+    while pos + default_chunk <= n:
+        hashes.append(chunk_hash(tokens[pos:pos + default_chunk], bits))
+        pos += default_chunk
+    return hashes
+
+
+@dataclass
+class _Node:
+    children: dict = field(default_factory=dict)     # hash -> _Node
+    holders: dict = field(default_factory=dict)      # node_id -> ts
+
+
+class HRTree:
+    """Aggregated view of the group's cached prefixes."""
+
+    def __init__(self, lengths: Sequence[int], bits: int = 8,
+                 default_chunk: int = 64):
+        self.lengths = list(lengths)
+        self.bits = bits
+        self.default_chunk = default_chunk
+        self.root = _Node()
+
+    # ---- building ----
+    def insert_hashes(self, hashes: Iterable[int], holder, ts=None):
+        ts = time.monotonic() if ts is None else ts
+        node = self.root
+        for h in hashes:
+            node = node.children.setdefault(h, _Node())
+            node.holders[holder] = ts
+
+    def insert_tokens(self, tokens: Sequence[int], holder, ts=None):
+        self.insert_hashes(
+            preprocess(tokens, self.lengths, self.bits, self.default_chunk),
+            holder, ts)
+
+    # ---- search (Algorithm 1) ----
+    def search_hashes(self, hashes: Sequence[int], tau: int
+                      ) -> tuple[list, int]:
+        node, d = self.root, 0
+        for h in hashes:
+            child = node.children.get(h)
+            if child is None:
+                break
+            node, d = child, d + 1
+        if d < tau:
+            return [], d
+        return list(node.holders.keys()), d
+
+    def search_tokens(self, tokens: Sequence[int], tau: int
+                      ) -> tuple[list, int]:
+        return self.search_hashes(
+            preprocess(tokens, self.lengths, self.bits, self.default_chunk),
+            tau)
+
+    # ---- sync ----
+    def export_paths(self, holder) -> list[list[int]]:
+        """Hash paths this holder appears on (leaf-deep only) — what a model
+        node broadcasts in state synchronization."""
+        out = []
+
+        def walk(node, prefix):
+            leafish = True
+            for h, ch in node.children.items():
+                if holder in ch.holders:
+                    leafish = False
+                    walk(ch, prefix + [h])
+            if leafish and prefix:
+                out.append(prefix)
+
+        walk(self.root, [])
+        return out
+
+    def merge_paths(self, paths: Iterable[Sequence[int]], holder, ts=None):
+        for p in paths:
+            self.insert_hashes(p, holder, ts)
+
+    def remove_holder(self, holder):
+        def walk(node):
+            node.holders.pop(holder, None)
+            dead = []
+            for h, ch in node.children.items():
+                walk(ch)
+                if not ch.holders and not ch.children:
+                    dead.append(h)
+            for h in dead:
+                node.children.pop(h)
+
+        walk(self.root)
+
+    def expire(self, before_ts: float):
+        def walk(node):
+            for nid, ts in list(node.holders.items()):
+                if ts < before_ts:
+                    node.holders.pop(nid)
+            dead = []
+            for h, ch in node.children.items():
+                walk(ch)
+                if not ch.holders and not ch.children:
+                    dead.append(h)
+            for h in dead:
+                node.children.pop(h)
+
+        walk(self.root)
+
+    # ---- stats ----
+    def size(self) -> int:
+        n = 0
+        stack = [self.root]
+        while stack:
+            nd = stack.pop()
+            n += 1
+            stack.extend(nd.children.values())
+        return n
+
+    def false_positive_rate(self, depth: int) -> float:
+        return (1.0 / (1 << self.bits)) ** max(depth, 1)

@@ -1,0 +1,108 @@
+"""Roofline accounting: parse collective ops out of compiled HLO text.
+
+``cost_analysis()`` does not expose collective traffic, so we scan the
+optimized HLO for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops, decode result shapes + replica groups, and apply
+ring-algorithm effective-bytes factors (per participating device):
+
+  all-reduce          2 * R * (g-1)/g          (R = result bytes)
+  all-gather          R * (g-1)/g
+  reduce-scatter      R * (g-1)               (input = R * g)
+  all-to-all          R * (g-1)/g
+  collective-permute  R
+
+t_collective = sum(per-device effective bytes) / link_bw, which matches the
+brief's ``collective_bytes / (chips * link_bw)`` with collective_bytes summed
+over all chips.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(1, len(ids))
+    return default
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> dict:
+    """Per-op-type counts and per-device effective bytes."""
+    stats = defaultdict(lambda: {"count": 0, "raw_bytes": 0, "eff_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        shape_txt, op = m.group(1), m.group(2)
+        rb = _shape_bytes(shape_txt)
+        if rb == 0:
+            continue
+        g = _group_size(line, n_devices)
+        if op == "all-reduce":
+            eff = 2.0 * rb * (g - 1) / g
+        elif op == "all-gather":
+            eff = rb * (g - 1) / g
+        elif op == "reduce-scatter":
+            eff = float(rb) * (g - 1)
+        elif op == "all-to-all":
+            eff = rb * (g - 1) / g
+        else:  # collective-permute
+            eff = float(rb)
+        s = stats[op]
+        s["count"] += 1
+        s["raw_bytes"] += rb
+        s["eff_bytes"] += eff
+    total = {"count": sum(s["count"] for s in stats.values()),
+             "eff_bytes": sum(s["eff_bytes"] for s in stats.values())}
+    return {"by_op": dict(stats), "total": total}
+
+
+# TPU v5e-class constants (per the brief)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_eff_bytes_per_dev: float) -> dict:
+    t_c = flops_per_dev / PEAK_FLOPS_BF16
+    t_m = bytes_per_dev / HBM_BW
+    t_n = coll_eff_bytes_per_dev / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_n),
+              key=lambda kv: kv[1])
+    return {"t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_n,
+            "dominant": dom[0],
+            "roofline_s": max(t_c, t_m, t_n)}

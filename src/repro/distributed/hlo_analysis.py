@@ -1,0 +1,329 @@
+"""Trip-count-aware analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers model is undercounted by the trip count (verified
+empirically — see EXPERIMENTS.md §Dry-run notes).  The optimized HLO does
+annotate every while with ``known_trip_count``, so this module re-derives
+the roofline inputs directly from the compiled artifact:
+
+  flops      dot ops: 2 * prod(result dims) * prod(contracting dims),
+             scaled by the product of enclosing loop trip counts
+  bytes      per top-level op (fusion/dot/collective/...): operands + result
+             — XLA has already fused, so operand/result sizes of the
+             remaining nodes model HBM traffic
+  collectives ring-effective bytes per device (see collectives.py), scaled
+
+Per-device numbers: the artifact analyzed is the SPMD-partitioned module.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE_TOK = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+_TRIP = re.compile(r"known_trip_count[^0-9]*(\d+)")
+
+
+def _split_shape_op(rhs: str):
+    """'(s32[], f32[..]) while(%t), ...' -> (shape_txt, op, rest)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    shape = rhs[:i + 1]
+                    rest = rhs[i + 1:].strip()
+                    break
+        else:
+            return None
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        shape, rest = rhs[:sp], rhs[sp + 1:].strip()
+    m = re.match(r"([\w\-]+)\(", rest)
+    if not m:
+        return None
+    return shape, m.group(1), rest
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_TOAPPLY = re.compile(r"to_apply=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_dims(txt: str):
+    """All (dtype, dims) tokens in a (possibly tuple) shape string."""
+    out = []
+    for dt, dims in _SHAPE_TOK.findall(txt):
+        if dt in _DTYPE_BYTES:
+            d = [int(x) for x in dims.split(",")] if dims else []
+            out.append((dt, d))
+    return out
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(txt):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    shape_txt: str
+    op: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # instr name -> shape_txt
+
+
+def parse_module(hlo: str) -> dict:
+    comps = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(stripped)
+            if m:
+                cur = Computation(m.group(1))
+            continue
+        if stripped.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        so = _split_shape_op(rhs)
+        if so is None:
+            continue
+        shape_txt, op, rest = so
+        cur.instrs.append(Instr(name, shape_txt, op, rest))
+        cur.shapes[name] = shape_txt
+    return comps
+
+
+def _operand_names(rest: str):
+    m = _OPERANDS.search(rest[rest.index("("):] if "(" in rest else rest)
+    if not m:
+        return []
+    names = []
+    for tok in m.group(1).split(","):
+        tok = tok.strip()
+        # operands may be "%name" or "f32[..] %name" or bare names
+        mm = re.search(r"%?([\w\.\-]+)\s*$", tok)
+        if mm:
+            names.append(mm.group(1))
+    return names
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    res = _shape_dims(ins.shape_txt)
+    if not res:
+        return 0.0
+    n_out = 1
+    for d in res[0][1]:
+        n_out *= d
+    ops = _operand_names(ins.rest)
+    lhs_shape = comp.shapes.get(ops[0] if ops else "", "")
+    lhs_dims_list = _shape_dims(lhs_shape)
+    lhs_dims = lhs_dims_list[0][1] if lhs_dims_list else []
+    mc = _LHS_C.search(ins.rest)
+    k = 1
+    if mc and lhs_dims:
+        for ix in (int(x) for x in mc.group(1).split(",") if x.strip()):
+            if ix < len(lhs_dims):
+                k *= lhs_dims[ix]
+    return 2.0 * n_out * k
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_IOTA.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(rest)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(1, len(ids))
+    return default
+
+
+def _coll_eff_bytes(op: str, rest: str, shape_txt: str, n_dev: int) -> float:
+    rb = _shape_bytes(shape_txt)
+    # async -start ops repeat shape of operands in result tuple; use half
+    g = _group_size(rest, n_dev)
+    if g <= 1:
+        return 0.0
+    if op.startswith("all-reduce"):
+        return 2.0 * rb * (g - 1) / g
+    if op.startswith("all-gather"):
+        return rb * (g - 1) / g
+    if op.startswith("reduce-scatter"):
+        return float(rb) * (g - 1)
+    if op.startswith("all-to-all"):
+        return rb * (g - 1) / g
+    return float(rb)  # collective-permute
+
+
+class Analyzer:
+    def __init__(self, hlo: str, n_devices: int):
+        self.comps = parse_module(hlo)
+        self.n_dev = n_devices
+        self._memo = {}
+
+    def total(self, name: str) -> dict:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        z = {"flops": 0.0, "bytes": 0.0, "coll_eff_bytes": 0.0,
+             "coll_by_op": defaultdict(float), "coll_count": 0.0,
+             "bytes_by_op": defaultdict(float), "top": []}
+        if comp is None:
+            self._memo[name] = z
+            return z
+        self._memo[name] = z  # break cycles
+        for ins in comp.instrs:
+            op = ins.op
+            base = op.replace("-start", "")
+            if base in COLLECTIVES:
+                eff = _coll_eff_bytes(base, ins.rest, ins.shape_txt,
+                                      self.n_dev)
+                z["coll_eff_bytes"] += eff
+                z["coll_by_op"][base] += eff
+                z["coll_count"] += 1
+                z["bytes"] += _shape_bytes(ins.shape_txt)
+                z["bytes_by_op"][base] += _shape_bytes(ins.shape_txt)
+            elif op == "dot":
+                z["flops"] += _dot_flops(comp, ins)
+                b = self._io_bytes(comp, ins)
+                z["bytes"] += b
+                z["bytes_by_op"]["dot"] += b
+            elif op == "fusion" or op == "custom-call":
+                # bytes: fusion I/O only (internals live in registers/VMEM —
+                # recursing would double-count); flops/collectives: recurse
+                b = self._io_bytes(comp, ins)
+                z["bytes"] += b
+                z["bytes_by_op"]["fusion"] += b
+                if b > 1e6:
+                    z["top"].append((b, f"fusion {ins.name} "
+                                     f"{ins.shape_txt[:60]}"))
+                m = _CALLS.search(ins.rest) or _TOAPPLY.search(ins.rest)
+                if m:
+                    self._add(z, self.total(m.group(1)), 1.0,
+                              include_bytes=False)
+            elif op == "while":
+                m = _BODY.search(ins.rest)
+                t = _TRIP.search(ins.rest)
+                trips = float(t.group(1)) if t else 1.0
+                if m:
+                    self._add(z, self.total(m.group(1)), trips)
+            elif op == "conditional":
+                m = _BRANCHES.search(ins.rest)
+                if m:
+                    subs = [self.total(s.strip().lstrip("%"))
+                            for s in m.group(1).split(",")]
+                    if subs:
+                        best = max(subs, key=lambda s: s["flops"] + s["bytes"])
+                        self._add(z, best, 1.0)
+            elif op == "call":
+                m = _TOAPPLY.search(ins.rest)
+                if m:
+                    self._add(z, self.total(m.group(1)), 1.0)
+            elif op == "dynamic-update-slice":
+                # in-place: traffic ~ 2x the updated region, not the buffer
+                ops_ = _operand_names(ins.rest)
+                upd = _shape_bytes(comp.shapes.get(ops_[1], "")) if \
+                    len(ops_) > 1 else 0
+                z["bytes"] += 2.0 * upd
+                z["bytes_by_op"]["dus"] += 2.0 * upd
+            elif op in ("dynamic-slice", "slice", "transpose", "copy",
+                        "broadcast", "iota", "reshape", "bitcast"):
+                b = 2.0 * _shape_bytes(ins.shape_txt)
+                z["bytes"] += b
+                z["bytes_by_op"][op] += b
+            elif op in ("convolution", "scatter", "gather", "sort", "reduce",
+                        "reduce-window", "select-and-scatter",
+                        "concatenate", "pad",
+                        "add", "multiply", "subtract", "divide", "exponential",
+                        "tanh", "compare", "select", "convert",
+                        "reverse", "map", "rng", "rng-bit-generator"):
+                b = self._io_bytes(comp, ins)
+                z["bytes"] += b
+                z["bytes_by_op"][op] += b
+        z["coll_by_op"] = dict(z["coll_by_op"])
+        return z
+
+    def _io_bytes(self, comp: Computation, ins: Instr) -> float:
+        b = float(_shape_bytes(ins.shape_txt))
+        for o in _operand_names(ins.rest):
+            b += _shape_bytes(comp.shapes.get(o, ""))
+        return b
+
+    @staticmethod
+    def _add(z, sub, mult, include_bytes=True):
+        z["flops"] += sub["flops"] * mult
+        if include_bytes:
+            z["bytes"] += sub["bytes"] * mult
+            for k, v in sub["bytes_by_op"].items():
+                z["bytes_by_op"][k] = z["bytes_by_op"].get(k, 0.0) + v * mult
+            z["top"] = sorted(
+                z["top"] + [(b * mult, f"{d} x{mult:g}")
+                            for b, d in sub.get("top", [])],
+                key=lambda t: -t[0])[:12]
+        z["coll_eff_bytes"] += sub["coll_eff_bytes"] * mult
+        z["coll_count"] += sub["coll_count"] * mult
+        for k, v in sub["coll_by_op"].items():
+            z["coll_by_op"][k] = z["coll_by_op"].get(k, 0.0) + v * mult
+
+    def entry(self) -> dict:
+        # entry computation = the one not referenced by others; use the
+        # longest named 'main' if present
+        for name in self.comps:
+            if name.startswith("main"):
+                return self.total(name)
+        # fallback: largest
+        best, bz = None, -1
+        for name in self.comps:
+            t = self.total(name)
+            if t["flops"] + t["bytes"] > bz:
+                best, bz = t, t["flops"] + t["bytes"]
+        return best or {}
+
+
+def analyze(hlo: str, n_devices: int) -> dict:
+    a = Analyzer(hlo, n_devices)
+    out = dict(a.entry())
+    out["coll_by_op"] = dict(out.get("coll_by_op", {}))
+    out["bytes_by_op"] = dict(out.get("bytes_by_op", {}))
+    return out

@@ -1,0 +1,187 @@
+"""Logical-axis -> PartitionSpec rules for every parameter / cache / input.
+
+Baseline scheme (see DESIGN.md §5 and the hillclimb log in EXPERIMENTS.md):
+  - batch over ('pod','data')                    [DP; FSDP weights on 'data']
+  - heads / d_ff / experts / vocab over 'model'  [TP / EP]
+  - KV heads over 'model' only when divisible (GQA kv < mesh would force
+    GSPMD padding; otherwise replicate KV, shard Q heads)
+  - train: weights & optimizer state FSDP-sharded on 'data' (ZeRO)
+  - serve: weights sharded on 'model' only (replicated over 'data')
+  - long-context decode (batch=1): cache *sequence* shards over 'data'
+    (context parallelism), heads over 'model'
+
+Rules are name-based over the param pytree paths, which keeps them
+readable and auditable — the dry-run fails loudly if a leaf is missed.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis(mesh, name) -> Optional[str]:
+    return name if name in mesh.axis_names else None
+
+
+def _divisible(n: int, mesh, axis: Optional[str]) -> Optional[str]:
+    if axis is None:
+        return None
+    return axis if n % mesh.shape[axis] == 0 else None
+
+
+def kv_axis(cfg, mesh) -> Optional[str]:
+    return _divisible(cfg.n_kv_heads, mesh, _axis(mesh, "model"))
+
+
+def head_axis(cfg, mesh) -> Optional[str]:
+    # GSPMD pads non-divisible head counts (yi: 56 -> 64); acceptable at
+    # baseline, revisited in the perf log.
+    return _axis(mesh, "model")
+
+
+def batch_axes(mesh, batch: int):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch % n == 0:
+        return axes
+    # fall back to whatever prefix divides
+    if "data" in mesh.axis_names and batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return ()
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+def param_pspec(cfg, path: tuple, shape: tuple, mesh, train: bool) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path.
+
+    Every rule is divisibility-guarded: jax.jit's explicit in_shardings
+    reject non-divisible dims (no GSPMD padding for inputs), so e.g. yi-34b's
+    56 query heads stay unsharded at baseline (d_ff carries the TP)."""
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf = names[-1]
+    stacked = ("blocks" in names) or ("layers" in names)
+    if stacked:  # scanned-layer stack: leading repeat dim, never sharded
+        shape = shape[1:]
+    fsdp = _axis(mesh, "data") if train else None
+    mdl = _axis(mesh, "model")
+    kva = kv_axis(cfg, mesh)
+
+    def fs(dim: int):  # fsdp only if divisible
+        return _divisible(dim, mesh, fsdp)
+
+    def md(dim: int):
+        return _divisible(dim, mesh, mdl)
+
+    def rule() -> tuple:
+        if leaf in ("embed", "lm_head", "pos_embed"):
+            return (md(shape[0]), fs(shape[1]))
+        if leaf in ("scale",) or (leaf == "bias" and len(shape) == 1):
+            return (None,)
+        if leaf == "wq":
+            return (fs(shape[0]), md(shape[1]), None)
+        if leaf in ("wk", "wv"):
+            return (fs(shape[0]), kva, None)
+        if leaf == "wo":
+            return (md(shape[0]), None, fs(shape[2]))
+        if leaf in ("w_gate", "w_up", "w_in", "ffn_gate", "ffn_up"):
+            if len(shape) == 3:   # MoE experts (E, d, ff)
+                return (md(shape[0]), fs(shape[1]), None)
+            return (fs(shape[0]), md(shape[1]))
+        if leaf in ("w_down", "w_out", "ffn_down"):
+            if len(shape) == 3:   # (E, ff, d)
+                return (md(shape[0]), None, fs(shape[2]))
+            return (md(shape[0]), fs(shape[1]))
+        if leaf == "router":
+            return (fs(shape[0]), None)
+        if leaf == "conv":
+            return (None, md(shape[1]))
+        if leaf in ("w_dt", "w_B", "w_C", "w_if"):
+            return (md(shape[0]), None)
+        if leaf in ("A_log", "D", "dt_bias", "if_bias"):
+            return (None,)
+        if leaf in ("w_q", "w_k"):  # mLSTM square projections
+            return (None, md(shape[1]))
+        if leaf == "head_norm":
+            return (None, None)
+        if leaf == "W" and len(shape) == 4:   # sLSTM gates (d,4,H,dh)
+            return (fs(shape[0]), None, None, md(shape[3]))
+        if leaf == "R" and len(shape) == 4:   # sLSTM recurrent (4,H,dh,dh)
+            return (None, None, None, md(shape[3]))
+        if leaf == "bias" and len(shape) == 3:
+            return (None, None, None)
+        return tuple([None] * len(shape))
+
+    spec = rule()
+    assert len(spec) == len(shape), (leaf, spec, shape)
+    if stacked:
+        spec = (None,) + spec
+    return P(*spec)
+
+
+def param_shardings(cfg, params_tree, mesh, train: bool):
+    def one(path, leaf):
+        spec = param_pspec(cfg, path, leaf.shape, mesh, train)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+# --------------------------------------------------------------------------
+# Cache specs (decode)
+# --------------------------------------------------------------------------
+
+def cache_pspec(cfg, path: tuple, shape: tuple, mesh, long_ctx: bool) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf = names[-1]
+    mdl = _axis(mesh, "model")
+    kva = kv_axis(cfg, mesh)
+    data = _axis(mesh, "data")
+    if long_ctx:
+        b = None
+        seq = data
+    else:
+        b = batch_axes(mesh, shape[1]) or None
+        seq = None
+    if leaf in ("k", "v"):
+        # (R, B, size, n_kv, d_head)
+        s = _divisible(shape[2], mesh, seq) if seq else None
+        return P(None, b, s, kva, None)
+    if leaf == "conv":
+        return P(None, b, None, _divisible(shape[3], mesh, mdl))
+    if leaf == "h" and len(shape) == 5:       # mamba (R,B,H,N,P)
+        return P(None, b, _divisible(shape[2], mesh, mdl), None, None)
+    if leaf == "C" and len(shape) == 5:       # mlstm (R,B,H,dk,dv)
+        dk = _divisible(shape[3], mesh, seq) if long_ctx else None
+        return P(None, b, None, dk, _divisible(shape[4], mesh, mdl))
+    if leaf == "n" and len(shape) == 4:       # mlstm (R,B,H,dk)
+        return P(None, b, None, None)
+    if leaf == "m" and len(shape) == 3:
+        return P(None, b, None)
+    if len(shape) == 4:                       # slstm h/c/n/m (R,B,H,dh)
+        return P(None, b, None, _divisible(shape[3], mesh, mdl))
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(cfg, cache_tree, mesh, long_ctx: bool):
+    def one(path, leaf):
+        return NamedSharding(mesh, cache_pspec(cfg, path, leaf.shape, mesh,
+                                               long_ctx))
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+# --------------------------------------------------------------------------
+# Input specs
+# --------------------------------------------------------------------------
+
+def input_shardings(cfg, specs: dict, mesh):
+    out = {}
+    for name, s in specs.items():
+        b = batch_axes(mesh, s.shape[0]) or None
+        rest = [None] * (len(s.shape) - 1)
+        out[name] = NamedSharding(mesh, P(b, *rest))
+    return out

@@ -1,0 +1,1 @@
+from repro.kernels.chunk_hash.ops import chunk_hash_fixed  # noqa: F401

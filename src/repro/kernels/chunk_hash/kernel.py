@@ -1,0 +1,66 @@
+"""HR-tree chunk hashing as a Pallas kernel.
+
+Model nodes hash every incoming prompt into chunk fingerprints (core/
+hrtree.preprocess) — at production rates (thousands of ~10k-token prompts
+per second per group) this is a measurable CPU hot spot the paper's model
+nodes pay on every request.  On TPU the polynomial rolling hash
+
+    h_{i+1} = h_i * M + t_i + 1   (mod 2^32)
+
+over a fixed chunk width W becomes a log-step scan: precompute M^(2^j)
+and do W -> W/2 pair reductions on the VPU (u32 lane ops), hashing every
+chunk of every request in one launch.  The xor-fold to b bits matches
+core/hrtree.chunk_hash exactly for fixed-width chunks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+MULT = 1_000_003
+SEED = 0x9E3779B9
+M32 = 1 << 32
+
+
+def _hash_kernel(t_ref, o_ref, *, width, bits):
+    toks = t_ref[0].astype(jnp.uint32)                 # (nchunks, width)
+    vals = toks + np.uint32(1)
+    # log-step pairwise combine: [a, b] -> a * M^(len_b) + b
+    # multiplier powers are static Python ints (mod 2^32) -> inline literals
+    w, level = width, 0
+    while w > 1:
+        m = np.uint32(pow(MULT, 1 << level, M32))
+        vals = vals[:, 0::2] * m + vals[:, 1::2]
+        w //= 2
+        level += 1
+    # fold in the seed: h = SEED * M^width + poly
+    seed_term = np.uint32((SEED * pow(MULT, width, M32)) % M32)
+    h = seed_term + vals[:, 0]
+    # xor-fold 32 -> bits
+    out = jnp.zeros_like(h)
+    x = h
+    for _ in range(32 // bits + 1):
+        out = out ^ (x & np.uint32((1 << bits) - 1))
+        x = x >> np.uint32(bits)
+    o_ref[0] = out.astype(jnp.uint32)
+
+
+def chunk_hash_pallas(tokens, *, width=64, bits=8, interpret=False):
+    """tokens: (B, S) int32, S % width == 0 -> (B, S // width) uint32."""
+    B, S = tokens.shape
+    assert S % width == 0 and width & (width - 1) == 0, \
+        "width must be a power of two dividing S"
+    n = S // width
+    kern = functools.partial(_hash_kernel, width=width, bits=bits)
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, n, width), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n), jnp.uint32),
+        interpret=interpret,
+    )(tokens.reshape(B, n, width))

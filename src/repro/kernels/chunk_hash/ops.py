@@ -1,0 +1,18 @@
+"""jit'd wrapper for batched fixed-width chunk hashing."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunk_hash.kernel import chunk_hash_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("width", "bits", "impl"))
+def chunk_hash_fixed(tokens, *, width=64, bits=8, impl="auto"):
+    """tokens: (B, S) int32 -> (B, S // width) uint32 chunk fingerprints."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    return chunk_hash_pallas(tokens, width=width, bits=bits,
+                             interpret=impl == "interpret")

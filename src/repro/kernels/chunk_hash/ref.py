@@ -1,0 +1,17 @@
+"""Oracle: fixed-width chunk hashing must equal core/hrtree.chunk_hash."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hrtree import chunk_hash
+
+
+def chunk_hash_ref(tokens: np.ndarray, *, width=64, bits=8) -> np.ndarray:
+    B, S = tokens.shape
+    n = S // width
+    out = np.zeros((B, n), np.uint32)
+    for b in range(B):
+        for c in range(n):
+            out[b, c] = chunk_hash(tokens[b, c * width:(c + 1) * width],
+                                   bits=bits)
+    return out

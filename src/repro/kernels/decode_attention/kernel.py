@@ -1,0 +1,96 @@
+"""Decode attention (one query token vs a long KV cache): split-K
+flash-decoding, TPU-adapted.
+
+vLLM's PagedAttention gathers KV pages via a page table inside the CUDA
+kernel; TPU VMEM wants dense tiles, so the page indirection happens at the
+XLA level (dense cache slabs) and THIS kernel parallelizes over cache
+splits instead: grid = (B*H, n_splits); each program reduces its KV span
+to a partial (m, l, acc) written to HBM; the cheap cross-split softmax
+combine runs in ops.py.  Per-request valid lengths mask the tail.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                   scale, softcap, split, window):
+    js = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale               # (1, D)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (split, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    valid_len = len_ref[0, 0]                              # scalar int32
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (1, split)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = js * split + jax.lax.broadcasted_iota(jnp.int32, (1, split), 1)
+    mask = pos < valid_len
+    if window is not None:
+        mask &= pos >= (valid_len - window)
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max()
+    p = jnp.exp(s - m)
+    l = p.sum()
+    acc = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))  # (1, D)
+    o_ref[0, 0] = acc.astype(o_ref.dtype)
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+
+
+def decode_attention_pallas(q, k, v, lengths, *, window=None, softcap=None,
+                            scale=None, n_splits=8, interpret=False):
+    """q: (B, H, D); k, v: (B, Hkv, S, D); lengths: (B,) valid KV length.
+
+    Returns (B, H, D)."""
+    B, H, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    group = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    n_splits = max(1, min(n_splits, S))
+    while S % n_splits:
+        n_splits -= 1
+    split = S // n_splits
+
+    kern = functools.partial(_decode_kernel, scale=scale, softcap=softcap,
+                             split=split, window=window)
+    grid = (B * H, n_splits)
+    out, ms, ls = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, js: (bh // H, 0)),
+            pl.BlockSpec((1, 1, D), lambda bh, js: (bh // H, bh % H, 0)),
+            pl.BlockSpec((1, 1, split, D),
+                         lambda bh, js: (bh // H, (bh % H) // group, js, 0)),
+            pl.BlockSpec((1, 1, split, D),
+                         lambda bh, js: (bh // H, (bh % H) // group, js, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda bh, js: (bh // H, bh % H, js, 0)),
+            pl.BlockSpec((1, 1, 1),
+                         lambda bh, js: (bh // H, bh % H, js)),
+            pl.BlockSpec((1, 1, 1),
+                         lambda bh, js: (bh // H, bh % H, js)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, n_splits, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, n_splits), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, n_splits), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.reshape(B, 1).astype(jnp.int32), q, k, v)
+
+    # cross-split combine (cheap, XLA level)
+    m_all = ms.max(axis=-1, keepdims=True)                 # (B,H,1)
+    w = jnp.exp(ms - m_all)                                # (B,H,ns)
+    l_tot = (ls * w).sum(-1)                               # (B,H)
+    o = (out * w[..., None]).sum(2) / jnp.maximum(l_tot, 1e-20)[..., None]
+    return o.astype(q.dtype)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for split-K decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths, *, window=None, softcap=None,
+                         scale=None):
+    """q: (B, H, D); k, v: (B, Hkv, S, D); lengths: (B,) -> (B, H, D)."""
+    B, H, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    group = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(S)[None, None]
+    mask = pos < lengths[:, None, None]
+    if window is not None:
+        mask &= pos >= (lengths[:, None, None] - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p,
+                      vr.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,98 @@
+"""Flash attention Pallas TPU kernel: blockwise online softmax.
+
+Layout (B, H, S, D).  Grid = (B*H, S/bq): one program owns one query block
+for one (batch, head); K/V for the matching KV head stay VMEM-resident per
+program and are walked in bk-sized blocks with the online-softmax (m, l,
+acc) recurrence — the classic flash schedule, MXU-shaped (bq x bk x D
+matmuls), with causal masking, sliding windows, logit softcap and GQA
+(KV-head indexing in the BlockSpec index_map, no KV repetition in HBM).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
+                 softcap, bq, bk, seq_kv):
+    iq = pl.program_id(1)
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
+    D = q.shape[-1]
+    m = jnp.full((bq,), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq,), jnp.float32)
+    acc = jnp.zeros((bq, D), jnp.float32)
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    nk = seq_kv // bk
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.dslice(j * bk, bk), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(j * bk, bk), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ()))).astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    # causal: skip key blocks strictly after this query block
+    if causal:
+        nk_eff = jnp.minimum(nk, ((iq + 1) * bq + bk - 1) // bk)
+    else:
+        nk_eff = nk
+    m, l, acc = jax.lax.fori_loop(0, nk_eff, body, (m, l, acc))
+    out = acc / jnp.maximum(l, 1e-20)[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=None,
+                           softcap=None, scale=None, bq=128, bk=128,
+                           interpret=False):
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    Skv = k.shape[2]
+    group = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bq = min(bq, S)
+    bk = min(bk, Skv)
+    assert S % bq == 0 and Skv % bk == 0
+
+    kern = functools.partial(_attn_kernel, scale=scale, causal=causal,
+                             window=window, softcap=softcap, bq=bq, bk=bk,
+                             seq_kv=Skv)
+    grid = (B * H, S // bq)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D),
+                         lambda bh, iq: (bh // H, bh % H, iq, 0)),
+            pl.BlockSpec((1, 1, Skv, D),
+                         lambda bh, iq: (bh // H, (bh % H) // group, 0, 0)),
+            pl.BlockSpec((1, 1, Skv, D),
+                         lambda bh, iq: (bh // H, (bh % H) // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda bh, iq: (bh // H, bh % H, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,25 @@
+"""jit'd public wrapper: picks the Pallas kernel on TPU, interpret-mode
+kernel for CPU validation, or the jnp oracle."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale", "bq", "bk", "impl"))
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, bq=128, bk=128, impl="auto"):
+    """impl: auto | pallas | interpret | ref"""
+    if impl == "auto":
+        impl = ("pallas" if jax.default_backend() == "tpu" else "ref")
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale, bq=bq, bk=bk,
+                                  interpret=impl == "interpret")

@@ -1,0 +1,93 @@
+"""Chunked SSD selective-scan Pallas kernel (Mamba, TPU-native form).
+
+Grid = (B*H, n_chunks) with the chunk axis SEQUENTIAL ("arbitrary"
+dimension semantics on TPU): each program computes one chunk's
+intra-chunk quadratic form on the MXU and carries the (N, P) SSM state to
+the next chunk through a state output ref whose block index is constant
+along the chunk axis (the canonical Pallas carry pattern).  The state is
+initialized from h0 at chunk 0 (cache continuation works).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(xb_ref, la_ref, bm_ref, cm_ref, h0_ref,
+                  y_ref, h_ref, *, L):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[0, 0] = h0_ref[0, 0]
+
+    xb = xb_ref[0, 0, 0].astype(jnp.float32)         # (L, P)
+    la = la_ref[0, 0, 0].astype(jnp.float32)         # (L,)
+    bm = bm_ref[0, 0].astype(jnp.float32)            # (L, N)
+    cm = cm_ref[0, 0].astype(jnp.float32)            # (L, N)
+    h = h_ref[0, 0].astype(jnp.float32)              # (N, P)
+
+    l = jnp.cumsum(la)                               # (L,)
+    # inter-chunk: y_inter[s] = exp(l_s) * C_s . h
+    y_inter = jax.lax.dot_general(cm, h, (((1,), (0,)), ((), ()))) \
+        * jnp.exp(l)[:, None]                        # (L, P)
+    # intra-chunk attention form
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())))  # (L, L)
+    dec = jnp.exp(l[:, None] - l[None, :])
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    att = jnp.where(jj <= ii, cb * dec, 0.0)
+    y = y_inter + jax.lax.dot_general(att, xb, (((1,), (0,)), ((), ())))
+    # state update: h' = exp(l_L) h + sum_t exp(l_L - l_t) B_t xbar_t^T
+    w = jnp.exp(l[-1] - l)                           # (L,)
+    hb = jax.lax.dot_general(bm, xb * w[:, None],
+                             (((0,), (0,)), ((), ())))  # (N, P)
+    h_new = jnp.exp(l[-1]) * h + hb
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    h_ref[0, 0] = h_new
+
+
+def mamba_scan_pallas(xbar, loga, Bm, Cm, h0=None, *, interpret=False):
+    """xbar: (B, H, C, L, P); loga: (B, H, C, L); Bm/Cm: (B, C, L, N);
+    h0: (B, H, N, P) f32.  Returns (y (B,H,C,L,P), h_fin (B,H,N,P))."""
+    B, H, C, L, P = xbar.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    kern = functools.partial(_mamba_kernel, L=L)
+    grid = (B * H, C)
+    y, h_fin = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, L, P),
+                         lambda bh, c: (bh // H, bh % H, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, L),
+                         lambda bh, c: (bh // H, bh % H, c, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda bh, c: (bh // H, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda bh, c: (bh // H, c, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda bh, c: (bh // H, bh % H, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, L, P),
+                         lambda bh, c: (bh // H, bh % H, c, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda bh, c: (bh // H, bh % H, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, C, L, P), xbar.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(xbar, loga, Bm, Cm, h0)
+    # squeeze the per-program singleton dims the BlockSpecs introduce
+    return y.reshape(B, H, C, L, P), h_fin
+
+
+def _reshape_kernel_io(x, B, H, C, L):
+    return x

@@ -1,0 +1,21 @@
+"""jit'd wrapper for the chunked SSD scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mamba_scan.kernel import mamba_scan_pallas
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def mamba_scan(xbar, loga, Bm, Cm, h0=None, *, impl="auto"):
+    """xbar: (B,H,C,L,P); loga: (B,H,C,L); Bm/Cm: (B,C,L,N) ->
+    (y (B,H,C,L,P), h_fin (B,H,N,P))."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return mamba_scan_ref(xbar, loga, Bm, Cm, h0)
+    return mamba_scan_pallas(xbar, loga, Bm, Cm, h0,
+                             interpret=impl == "interpret")

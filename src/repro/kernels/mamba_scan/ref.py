@@ -1,0 +1,32 @@
+"""Oracle: sequential (per-timestep) SSD recurrence in pure jnp.
+
+  h_t = exp(loga_t) * h_{t-1} + B_t xbar_t^T ;  y_t = C_t . h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(xbar, loga, Bm, Cm, h0=None):
+    """xbar: (B, H, C, L, P); loga: (B, H, C, L); Bm/Cm: (B, C, L, N)."""
+    B, H, C, L, P = xbar.shape
+    N = Bm.shape[-1]
+    S = C * L
+    xs = xbar.reshape(B, H, S, P).astype(jnp.float32)
+    la = loga.reshape(B, H, S).astype(jnp.float32)
+    bm = Bm.reshape(B, S, N).astype(jnp.float32)
+    cm = Cm.reshape(B, S, N).astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(la[:, :, t])                     # (B, H)
+        hb = jnp.einsum("bn,bhp->bhnp", bm[:, t], xs[:, :, t])
+        h = h * a[:, :, None, None] + hb
+        y = jnp.einsum("bn,bhnp->bhp", cm[:, t], h)
+        return h, y
+
+    h_fin, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, C, L, P)
+    return y.astype(xbar.dtype), h_fin

@@ -1,0 +1,122 @@
+"""Chunkwise mLSTM Pallas kernel (xLSTM matrix-memory cell).
+
+Grid = (B*H, n_chunks), chunk axis sequential; carries the stabilized
+(C~, n~, m) state across chunks through constant-indexed output refs.
+Inside a chunk the exp-gate products form an (L, L) lower-triangular
+matrix fused with the q.k score matmul on the MXU — the same schedule as
+the SSD kernel but with data-dependent forget gates and the running-max
+stabilizer (all gate math in f32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _cummax(x):
+    """Inclusive running max along axis 0 via log-step doubling."""
+    n = x.shape[0]
+    shift = 1
+    while shift < n:
+        pad = jnp.full((shift,) + x.shape[1:], NEG, x.dtype)
+        x = jnp.maximum(x, jnp.concatenate([pad, x[:-shift]], axis=0))
+        shift *= 2
+    return x
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, gi_ref, gf_ref,
+                  c0_ref, n0_ref, m0_ref,
+                  h_ref, c_ref, n_ref, m_ref, *, L, scale):
+    c_ix = pl.program_id(1)
+
+    @pl.when(c_ix == 0)
+    def _init():
+        c_ref[0, 0] = c0_ref[0, 0]
+        n_ref[0, 0] = n0_ref[0, 0]
+        m_ref[0, 0] = m0_ref[0, 0]
+
+    q = q_ref[0, 0, 0].astype(jnp.float32) * scale     # (L, dh)
+    k = k_ref[0, 0, 0].astype(jnp.float32)
+    v = v_ref[0, 0, 0].astype(jnp.float32)
+    gi = gi_ref[0, 0, 0].astype(jnp.float32)           # (L,)
+    gf = gf_ref[0, 0, 0].astype(jnp.float32)
+    C = c_ref[0, 0].astype(jnp.float32)                # (dh, dh)
+    n = n_ref[0, 0].astype(jnp.float32)                # (1, dh)
+    m_prev = m_ref[0, 0][0]                            # scalar
+
+    b = jnp.cumsum(gf)                                 # (L,)
+    gmb = _cummax(gi - b)
+    m_new = b + jnp.maximum(m_prev, gmb)               # (L,)
+    inter = jnp.exp(b + m_prev - m_new)                # (L,)
+    dmat = (b[:, None] - b[None, :] + gi[None, :] - m_new[:, None])
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    gate = jnp.where(jj <= ii, jnp.exp(dmat), 0.0)
+    sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (L, L)
+    att = gate * sc
+    num = (jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())))
+           + inter[:, None] * jax.lax.dot_general(
+               q, C, (((1,), (0,)), ((), ()))))
+    qn = (q * n).sum(axis=1)                           # (L,)
+    den = att.sum(axis=1) + inter * qn
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[:, None]
+    # state update
+    w_end = gate[L - 1]                                # (L,)
+    C_new = inter[L - 1] * C + jax.lax.dot_general(
+        k * w_end[:, None], v, (((0,), (0,)), ((), ())))
+    n_new = inter[L - 1] * n + (k * w_end[:, None]).sum(axis=0)[None]
+    h_ref[0, 0, 0] = h.astype(h_ref.dtype)
+    c_ref[0, 0] = C_new
+    n_ref[0, 0] = n_new
+    m_ref[0, 0] = m_new[L - 1][None]
+
+
+def mlstm_pallas(q, k, v, log_i, log_f, state0=None, *, scale=None,
+                 interpret=False):
+    """q/k/v: (B, H, C, L, dh); log_i/log_f: (B, H, C, L).
+
+    Returns (h (B,H,C,L,dh), (C (B,H,dh,dh), n (B,H,dh), m (B,H)))."""
+    B, H, C, L, dh = q.shape
+    scale = scale if scale is not None else 1.0
+    if state0 is None:
+        c0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, 1, dh), jnp.float32)
+        m0 = jnp.full((B, H, 1), NEG, jnp.float32)
+    else:
+        c0, n0, m0 = state0
+        n0 = n0.reshape(B, H, 1, dh)
+        m0 = m0.reshape(B, H, 1)
+    kern = functools.partial(_mlstm_kernel, L=L, scale=scale)
+    grid = (B * H, C)
+    spec5 = pl.BlockSpec((1, 1, 1, L, dh),
+                         lambda bh, c: (bh // H, bh % H, c, 0, 0))
+    spec4 = pl.BlockSpec((1, 1, 1, L),
+                         lambda bh, c: (bh // H, bh % H, c, 0))
+    spec_c = pl.BlockSpec((1, 1, dh, dh),
+                          lambda bh, c: (bh // H, bh % H, 0, 0))
+    spec_n = pl.BlockSpec((1, 1, 1, dh),
+                          lambda bh, c: (bh // H, bh % H, 0, 0))
+    spec_m = pl.BlockSpec((1, 1, 1), lambda bh, c: (bh // H, bh % H, 0))
+    h, c_f, n_f, m_f = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec5, spec5, spec5, spec4, spec4,
+                  spec_c, spec_n, spec_m],
+        out_specs=[spec5, spec_c, spec_n, spec_m],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, C, L, dh), q.dtype),
+            jax.ShapeDtypeStruct((B, H, dh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, 1, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(q, k, v, log_i, log_f, c0, n0, m0)
+    return h, (c_f, n_f.reshape(B, H, dh), m_f.reshape(B, H))

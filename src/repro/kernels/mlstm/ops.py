@@ -1,0 +1,20 @@
+"""jit'd wrapper for the chunkwise mLSTM kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mlstm.kernel import mlstm_pallas
+from repro.kernels.mlstm.ref import mlstm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "impl"))
+def mlstm_chunkwise(q, k, v, log_i, log_f, state0=None, *, scale=None,
+                    impl="auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return mlstm_ref(q, k, v, log_i, log_f, state0, scale=scale)
+    return mlstm_pallas(q, k, v, log_i, log_f, state0, scale=scale,
+                        interpret=impl == "interpret")

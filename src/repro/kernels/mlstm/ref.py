@@ -1,0 +1,41 @@
+"""Oracle: per-timestep stabilized mLSTM recurrence in pure jnp."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q, k, v, log_i, log_f, state0=None, *, scale=None):
+    """q/k/v: (B, H, C, L, dh); gates: (B, H, C, L)."""
+    B, H, C, L, dh = q.shape
+    S = C * L
+    scale = scale if scale is not None else 1.0
+    qs = q.reshape(B, H, S, dh).astype(jnp.float32) * scale
+    ks_ = k.reshape(B, H, S, dh).astype(jnp.float32)
+    vs = v.reshape(B, H, S, dh).astype(jnp.float32)
+    gi = log_i.reshape(B, H, S).astype(jnp.float32)
+    gf = log_f.reshape(B, H, S).astype(jnp.float32)
+    if state0 is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state0
+
+    def step(carry, t):
+        Cm, n, m = carry
+        m_new = jnp.maximum(gf[:, :, t] + m, gi[:, :, t])
+        f_s = jnp.exp(gf[:, :, t] + m - m_new)
+        i_s = jnp.exp(gi[:, :, t] - m_new)
+        Cm = (f_s[:, :, None, None] * Cm
+              + i_s[:, :, None, None]
+              * jnp.einsum("bhe,bhf->bhef", ks_[:, :, t], vs[:, :, t]))
+        n = f_s[:, :, None] * n + i_s[:, :, None] * ks_[:, :, t]
+        num = jnp.einsum("bhe,bhef->bhf", qs[:, :, t], Cm)
+        den = jnp.abs(jnp.einsum("bhe,bhe->bh", qs[:, :, t], n))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[:, :, None]
+        return (Cm, n, m_new), h
+
+    (C_f, n_f, m_f), hs = jax.lax.scan(step, (C0, n0, m0), jnp.arange(S))
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, H, C, L, dh).astype(q.dtype)
+    return h, (C_f, n_f, m_f)

@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count on first init).  512 placeholder host devices back the production
+# meshes: 16x16 single-pod and 2x16x16 multi-pod.
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import base as cfgbase                    # noqa: E402
+from repro.distributed import collectives, hlo_analysis, sharding  # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.models.lm import build_model                      # noqa: E402
+from repro.training import optimizer as opt_lib              # noqa: E402
+from repro.training.train_step import make_train_step        # noqa: E402
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    return out
+
+
+def _cost_analysis(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and
+                (k in ("flops", "bytes accessed", "optimal_seconds")
+                 or k.startswith("bytes accessed"))}
+    except Exception:
+        return {}
+
+
+def build_step(cfg, shape, mesh):
+    """Returns (jitted_fn, arg_specs) for the cell's step function."""
+    model = build_model(cfg)
+    specs = cfgbase.input_specs(cfg, shape)
+    in_sh = sharding.input_shardings(cfg, specs, mesh)
+
+    if shape.kind == "train":
+        adamw = opt_lib.AdamWConfig()
+        step_fn = make_train_step(cfg, model, adamw)
+        p_spec = model.param_specs()
+        o_spec = jax.eval_shape(opt_lib.init_state, p_spec)
+        p_sh = sharding.param_shardings(cfg, p_spec, mesh, train=True)
+        o_sh = {"mu": sharding.param_shardings(cfg, p_spec, mesh, True),
+                "nu": sharding.param_shardings(cfg, p_spec, mesh, True),
+                "step": jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec())}
+        fn = jax.jit(step_fn,
+                     in_shardings=(p_sh, o_sh, in_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        return fn, (p_spec, o_spec, specs)
+
+    # serving path: bf16 params, no FSDP (weights sharded on model axis only)
+    scfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    smodel = build_model(scfg)
+    p_spec = smodel.param_specs()
+    p_sh = sharding.param_shardings(scfg, p_spec, mesh, train=False)
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            aux = {k: v for k, v in batch.items() if k != "tokens"}
+            return smodel.prefill(params, batch["tokens"], aux=aux or None,
+                                  max_len=shape.seq_len)
+        c_spec = _cache_spec(scfg, smodel, shape)
+        c_sh = sharding.cache_shardings(
+            scfg, c_spec, mesh, long_ctx=shape.name == "long_500k")
+        fn = jax.jit(prefill_fn, in_shardings=(p_sh, in_sh),
+                     out_shardings=(None, c_sh))
+        return fn, (p_spec, specs)
+
+    # decode: one new token against a cache of seq_len
+    c_spec = _cache_spec(scfg, smodel, shape)
+    c_sh = sharding.cache_shardings(
+        scfg, c_spec, mesh, long_ctx=shape.name == "long_500k")
+
+    def decode_fn(params, cache, batch):
+        return smodel.decode(params, cache, batch["tokens"], batch["pos"])
+
+    fn = jax.jit(decode_fn, in_shardings=(p_sh, c_sh, in_sh),
+                 out_shardings=(None, c_sh), donate_argnums=(1,))
+    return fn, (p_spec, c_spec, specs)
+
+
+def _cache_spec(cfg, model, shape):
+    T_mem = 0
+    if cfg.is_encdec:
+        T_mem = shape.seq_len // 2
+    elif cfg.n_image_tokens:
+        T_mem = cfg.n_image_tokens
+    return model.cache_specs(shape.global_batch, shape.seq_len, T_mem)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             force: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out_path = out_dir / mesh_name / f"{arch}_{shape_name}.json"
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = cfgbase.get_config(arch)
+    shape = cfgbase.SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "seq_len": shape.seq_len,
+           "global_batch": shape.global_batch}
+    runnable, reason = cfgbase.cell_is_runnable(cfg, shape)
+    if not runnable:
+        rec.update(status="skipped", reason=reason)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    try:
+        from repro.distributed.constraints import activation_mesh
+        t0 = time.time()
+        with mesh, activation_mesh(mesh):
+            fn, arg_specs = build_step(cfg, shape, mesh)
+            lowered = fn.lower(*arg_specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ca = _cost_analysis(compiled)
+        ma = _mem_analysis(compiled)
+        hlo = compiled.as_text()
+        # trip-count-aware per-device flops/bytes/collectives (XLA's own
+        # cost_analysis counts while bodies once; see hlo_analysis.py)
+        hla = hlo_analysis.analyze(hlo, n_dev)
+        coll = collectives.collective_stats(hlo, n_dev)  # unscaled x-check
+        counts = cfg.param_counts()
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            n_devices=int(n_dev),
+            cost_analysis=ca, memory_analysis=ma,
+            hlo_analysis=hla, collectives_unscaled=coll,
+            params_total=counts["total"], params_active=counts["active"],
+            hlo_bytes=len(hlo),
+        )
+    except Exception as e:  # a failing cell is a bug in our sharding
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(cfgbase.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    rec = run_cell(args.arch, args.shape, args.multi_pod, Path(args.out),
+                   args.force)
+    brief = {k: rec.get(k) for k in
+             ("arch", "shape", "mesh", "status", "compile_s", "error")}
+    if rec.get("status") == "ok":
+        h = rec.get("hlo_analysis", {})
+        print(json.dumps({**brief,
+                          "flops_per_dev": h.get("flops"),
+                          "bytes_per_dev": h.get("bytes"),
+                          "coll_eff_bytes_per_dev": h.get("coll_eff_bytes"),
+                          "mem": rec.get("memory_analysis", {})},
+                         default=str))
+        # the two artifacts the brief asks to print:
+        print("memory_analysis:", rec.get("memory_analysis"))
+        print("cost_analysis:", rec.get("cost_analysis"))
+    else:
+        print(json.dumps(brief))
+        if rec.get("status") == "error":
+            print(rec.get("traceback", ""))
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

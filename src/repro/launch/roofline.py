@@ -1,0 +1,57 @@
+"""Roofline CLI: render the three-term table from dry-run artifacts.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--dir results/dryrun/pod16x16]
+        [--baseline results/dryrun_baseline/pod16x16] [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun/pod16x16")
+    ap.add_argument("--baseline", default="")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+
+    sys.path.insert(0, str(Path(__file__).resolve().parents[3]))
+    from benchmarks.bench_roofline import build_table
+
+    rows = build_table(args.dir)
+    base = {}
+    if args.baseline:
+        base = {(r["arch"], r["shape"]): r
+                for r in build_table(args.baseline)}
+    hdr = (f"{'arch':<22} {'shape':<12} {'t_comp':>9} {'t_mem':>9} "
+           f"{'t_coll':>9} {'dom':<5} {'useful':>6} {'HBM/dev':>8}")
+    if base:
+        hdr += "  vs-baseline"
+    print(hdr)
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']:<22} {r['shape']:<12} skipped: "
+                  f"{r.get('reason','')[:60]}")
+            continue
+        line = (f"{r['arch']:<22} {r['shape']:<12} "
+                f"{r['t_compute_s']:>9.3g} {r['t_memory_s']:>9.3g} "
+                f"{r['t_collective_s']:>9.3g} {r['dominant'][:4]:<5} "
+                f"{r['useful_flops_ratio']:>6.2f} "
+                f"{r['hbm_per_dev_gb']:>7.1f}G")
+        b = base.get((r["arch"], r["shape"]))
+        if b and b.get("status") == "ok":
+            bmax = max(b["t_compute_s"], b["t_memory_s"],
+                       b["t_collective_s"])
+            vmax = max(r["t_compute_s"], r["t_memory_s"],
+                       r["t_collective_s"])
+            line += f"  {bmax/max(vmax,1e-12):>6.1f}x"
+        print(line)
+    if args.json:
+        Path(args.json).write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Serving driver: run a GenTorrent overlay serving a workload, on either
+the deterministic simulator (default) or the localhost TCP transport.
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 100 --rate 2 \
+        --workload Mixed --mode full
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--workload", default="Mixed",
+                    choices=["ToolUse", "Coding", "LongQA", "Mixed"])
+    ap.add_argument("--mode", default="full",
+                    choices=["full", "lb_only", "none"],
+                    help="overlay forwarding mode (Fig 16 ablation)")
+    ap.add_argument("--models", type=int, default=8)
+    ap.add_argument("--users", type=int, default=24)
+    args = ap.parse_args()
+
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[3]))
+    from benchmarks.serving_sim import run_serving_sim
+
+    out = run_serving_sim(args.workload, args.mode, args.rate,
+                          n_requests=args.requests,
+                          n_users=args.users, n_models=args.models)
+    print(json.dumps(out, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

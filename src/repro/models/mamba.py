@@ -1,0 +1,204 @@
+"""Mamba mixer in chunked SSD form (TPU-native adaptation).
+
+The CUDA selective-scan kernel streams per-(channel,state) recurrences
+through shared memory — a form with no MXU analogue.  We adopt the SSD
+(Mamba-2) parameterization: scalar decay per head per step, head dim P,
+shared B/C of size N.  The sequence is processed in chunks of length L:
+
+  intra-chunk:  y[s] += sum_{t<=s} (C_s . B_t) * exp(l_s - l_t) * xbar_t
+                -> an (L, L) attention-like matmul per head (MXU shaped)
+  inter-chunk:  h' = exp(l_L) * h + sum_t exp(l_L - l_t) * B_t xbar_t^T
+                y[s] += C_s . (exp(l_s) * h_prev)
+                -> a lax.scan over chunks carrying (B, H, N, P) state
+
+where l = cumsum(log a) within the chunk and xbar = x * dt.  Decode keeps the
+O(1) recurrent state: h = a*h + B xbar^T.  The Pallas kernel
+(kernels/mamba_scan) implements the intra-chunk part; this file is the jnp
+reference path lowered by the dry-run.  DESIGN.md records the Mamba-1 ->
+SSD parameterization substitution.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+HEAD_DIM = 128  # SSD head dim P
+
+
+def dims(cfg):
+    di = cfg.d_inner_mamba
+    P = min(HEAD_DIM, di)
+    H = di // P
+    return di, H, P, cfg.mamba.d_state
+
+
+def init_mamba(cfg, key):
+    d = cfg.d_model
+    di, H, P, N = dims(cfg)
+    dc = cfg.mamba.d_conv
+    kin, kconv, kdt, kB, kC, kout, kA = jax.random.split(key, 7)
+    pd = cfg.params_dtype
+    # A init: -uniform(1, 16) per head (mamba convention), stored as log(-A)
+    a_init = jnp.log(jax.random.uniform(kA, (H,), jnp.float32, 1.0, 16.0))
+    return {
+        "w_in": common.dense_init(kin, (d, 2 * di), d, pd),     # x | z gate
+        "conv": common.dense_init(kconv, (dc, di), dc, pd),     # depthwise
+        "w_dt": common.dense_init(kdt, (di, H), di, pd),
+        "dt_bias": jnp.zeros((H,), pd),
+        "w_B": common.dense_init(kB, (di, N), di, pd),
+        "w_C": common.dense_init(kC, (di, N), di, pd),
+        "A_log": a_init.astype(pd),
+        "D": jnp.ones((H,), pd),
+        "w_out": common.dense_init(kout, (di, d), di, pd),
+    }
+
+
+def _depthwise_conv(cfg, w, x, init_state=None):
+    """Causal depthwise conv, taps dc.  x: (B, S, di) -> (B, S, di).
+
+    init_state: (B, dc-1, di) trailing inputs from a previous segment.
+    Also returns the new trailing state for caching."""
+    dc = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(dc))
+    new_state = xp[:, xp.shape[1] - (dc - 1):]
+    return out, new_state
+
+
+def _proj_scan_inputs(cfg, p, x):
+    """x: (B, S, d) post-norm -> (xbar, z, logA*dt, Bm, Cm)."""
+    dt_ = cfg.compute_dtype
+    di, H, P, N = dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(dt_))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    return xi, z
+
+
+def _ssm_params(cfg, p, xc):
+    """xc: (B, S, di) post-conv+act."""
+    dt_ = cfg.compute_dtype
+    di, H, P, N = dims(cfg)
+    B_, S, _ = xc.shape
+    dt_raw = jnp.einsum("bsd,dh->bsh", xc, p["w_dt"].astype(dt_))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))   # (B,S,H) f32
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (H,)
+    loga = dt * A[None, None, :]                              # log decay <= 0
+    Bm = jnp.einsum("bsd,dn->bsn", xc, p["w_B"].astype(dt_))
+    Cm = jnp.einsum("bsd,dn->bsn", xc, p["w_C"].astype(dt_))
+    xh = xc.reshape(B_, S, H, P)
+    xbar = xh * dt[..., None].astype(xc.dtype)                # x * dt
+    return xbar, loga, Bm, Cm, xh
+
+
+def ssd_scan(cfg, xbar, loga, Bm, Cm, h0=None):
+    """Chunked SSD scan.
+
+    xbar: (B, S, H, P); loga: (B, S, H) f32; Bm/Cm: (B, S, N).
+    Returns y: (B, S, H, P) and final state (B, H, N, P).
+    """
+    Bsz, S, H, P = xbar.shape
+    N = Bm.shape[-1]
+    L = min(cfg.mamba.chunk, S)
+    nchunks = math.ceil(S / L)
+    pad = nchunks * L - S
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(a):
+        return a.reshape(Bsz, nchunks, L, *a.shape[2:]).swapaxes(0, 1)
+
+    xc, lc, bc, cc = map(to_chunks, (xbar, loga, Bm, Cm))
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    def chunk_step(h, xs):
+        xb, la, bm, cm = xs          # (B,L,H,P) (B,L,H) (B,L,N) (B,L,N)
+        l = jnp.cumsum(la, axis=1)   # (B,L,H) inclusive cumulative log decay
+        # inter: y_inter[s] = C_s . (exp(l_s) * h)
+        dh = jnp.exp(l)              # decay from chunk start, (B,L,H)
+        y_inter = jnp.einsum("bln,bhnp->blhp", cm, h) * dh[..., None]
+        # intra: att[s,t] = (C_s.B_t) exp(l_s - l_t) for t <= s
+        cb = jnp.einsum("bsn,btn->bst", cm, bm)[:, None]      # (B,1,S,T)
+        dec = l[:, :, None, :] - l[:, None, :, :]             # (B,S,T,H)
+        dec = jnp.transpose(dec, (0, 3, 1, 2))                # (B,H,S,T)
+        mask = jnp.tril(jnp.ones((xb.shape[1], xb.shape[1]), bool))
+        att = jnp.where(mask[None, None], cb * jnp.exp(dec), 0.0)
+        y_intra = jnp.einsum("bhst,bthp->bshp",
+                             att.astype(xb.dtype), xb)
+        # state update: h' = exp(l_L) h + sum_t exp(l_L - l_t) B_t xbar_t^T
+        lL = l[:, -1]                                          # (B,H)
+        w = jnp.exp(lL[:, None] - l)                           # (B,L,H)
+        hb = jnp.einsum("bln,blhp->bhnp",
+                        bm.astype(jnp.float32),
+                        (xb.astype(jnp.float32) * w[..., None]))
+        h_new = jnp.exp(lL)[:, :, None, None] * h + hb
+        y = y_inter.astype(xb.dtype) + y_intra
+        return h_new, y
+
+    h_fin, ys = jax.lax.scan(chunk_step, h0, (xc, lc, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(Bsz, nchunks * L, H, P)[:, :S]
+    return y, h_fin
+
+
+def mamba_forward(cfg, p, x, cache=None, return_cache: bool = False):
+    """Full-sequence mixer.  x: (B, S, d) -> (B, S, d).
+
+    cache (decode/prefill continuation): {"conv": (B, dc-1, di),
+    "h": (B, H, N, P)}; returned updated when return_cache.
+    """
+    dt_ = cfg.compute_dtype
+    di, H, P, N = dims(cfg)
+    xi, z = _proj_scan_inputs(cfg, p, x)
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _depthwise_conv(cfg, p["conv"].astype(dt_), xi, conv_state)
+    xc = jax.nn.silu(xc)
+    xbar, loga, Bm, Cm, xh = _ssm_params(cfg, p, xc)
+    h0 = cache["h"] if cache is not None else None
+    y, h_fin = ssd_scan(cfg, xbar, loga, Bm, Cm, h0)
+    y = y + xh * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(x.shape[0], x.shape[1], di)
+    out = jnp.einsum("bse,ed->bsd", y * jax.nn.silu(z),
+                     p["w_out"].astype(dt_))
+    if return_cache:
+        return out, {"conv": new_conv, "h": h_fin}
+    return out
+
+
+def mamba_decode(cfg, p, x, cache):
+    """Single-token decode.  x: (B, 1, d)."""
+    dt_ = cfg.compute_dtype
+    di, H, P, N = dims(cfg)
+    xi, z = _proj_scan_inputs(cfg, p, x)                      # (B,1,di)
+    xc, new_conv = _depthwise_conv(cfg, p["conv"].astype(dt_), xi,
+                                   cache["conv"])
+    xc = jax.nn.silu(xc)
+    xbar, loga, Bm, Cm, xh = _ssm_params(cfg, p, xc)
+    a = jnp.exp(loga[:, 0])                                   # (B,H)
+    h = cache["h"] * a[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+        xbar[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), h)
+    y = y.astype(dt_)[:, None] + xh * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(x.shape[0], 1, di)
+    out = jnp.einsum("bse,ed->bsd", y * jax.nn.silu(z),
+                     p["w_out"].astype(dt_))
+    return out, {"conv": new_conv, "h": h}
+
+
+def init_cache(cfg, batch: int, dtype=None):
+    di, H, P, N = dims(cfg)
+    dc = cfg.mamba.d_conv
+    dt_ = dtype or cfg.compute_dtype
+    return {"conv": jnp.zeros((batch, dc - 1, di), dt_),
+            "h": jnp.zeros((batch, H, N, P), jnp.float32)}

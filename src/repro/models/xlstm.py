@@ -1,0 +1,283 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+mLSTM = matrix-memory LSTM:
+    C_t = f_t C_{t-1} + i_t k_t v_t^T,  n_t = f_t n_{t-1} + i_t k_t,
+    h_t = (q'_t C_t) / max(|q'_t n_t|, exp(-m_t)),  q' = q/sqrt(dh)
+with exp input gates, sigmoid forget gates (in log space) and running-max
+stabilizer m.  We use the stabilized *chunkwise* formulation: within a chunk
+of length L the gate products form an (L, L) lower-triangular matrix (MXU
+shaped); across chunks a lax.scan carries (C~, n~, m) where
+true C = C~ * exp(m).  All gate math in f32.
+
+sLSTM = scalar-memory LSTM with block-diagonal recurrent matrices R per head;
+the hidden-state feedback makes it inherently sequential, so it is a
+lax.scan over time (1/8 of layers at the paper-accurate 7:1 ratio).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def mlstm_dims(cfg):
+    di = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    H = cfg.n_heads
+    return di, H, di // H
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+
+def init_mlstm(cfg, key):
+    d = cfg.d_model
+    di, H, dh = mlstm_dims(cfg)
+    kup, kconv, kq, kk, kif, ko = jax.random.split(key, 6)
+    pd = cfg.params_dtype
+    return {
+        "w_up": common.dense_init(kup, (d, 2 * di), d, pd),    # xi | z
+        "conv": common.dense_init(kconv, (cfg.xlstm.conv_width, di),
+                                  cfg.xlstm.conv_width, pd),
+        "w_q": common.dense_init(kq, (di, di), di, pd),
+        "w_k": common.dense_init(kk, (di, di), di, pd),
+        "w_if": common.dense_init(kif, (di, 2 * H), di, pd),   # i~ | f~
+        "if_bias": jnp.concatenate([jnp.zeros((H,)),
+                                    jnp.linspace(3.0, 6.0, H)]).astype(pd),
+        "head_norm": jnp.ones((H, dh), pd),
+        "w_down": common.dense_init(ko, (di, d), di, pd),
+    }
+
+
+def _conv_silu(cfg, w, x, state=None):
+    dc = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(dc))
+    return jax.nn.silu(out), xp[:, xp.shape[1] - (dc - 1):]
+
+
+def _mlstm_proj(cfg, p, x, conv_state=None):
+    dt = cfg.compute_dtype
+    di, H, dh = mlstm_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(dt))
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc, new_conv = _conv_silu(cfg, p["conv"].astype(dt), xi, conv_state)
+    B, S, _ = x.shape
+    scale = 1.0 / math.sqrt(dh)
+    q = (jnp.einsum("bse,ef->bsf", xc, p["w_q"].astype(dt)) * scale
+         ).reshape(B, S, H, dh)
+    k = jnp.einsum("bse,ef->bsf", xc, p["w_k"].astype(dt)).reshape(B, S, H, dh)
+    v = xi.reshape(B, S, H, dh)
+    gates = (jnp.einsum("bse,eg->bsg", xc, p["w_if"].astype(dt))
+             .astype(jnp.float32) + p["if_bias"].astype(jnp.float32))
+    log_i, f_raw = jnp.split(gates, 2, axis=-1)                # (B,S,H)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    return q, k, v, log_i, log_f, z, new_conv
+
+
+def _finish(cfg, p, h, z):
+    """h: (B,S,H,dh) -> (B,S,d): headwise RMS norm, gate, down-proj."""
+    dt = cfg.compute_dtype
+    di, H, dh = mlstm_dims(cfg)
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
+    hn = hf * jax.lax.rsqrt(var + 1e-6) * p["head_norm"].astype(jnp.float32)
+    hn = hn.astype(dt).reshape(h.shape[0], h.shape[1], di)
+    return jnp.einsum("bse,ed->bsd", hn * jax.nn.silu(z),
+                      p["w_down"].astype(dt))
+
+
+def empty_mlstm_state(cfg, batch):
+    di, H, dh = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.xlstm.conv_width - 1, di),
+                          cfg.compute_dtype),
+    }
+
+
+def mlstm_forward(cfg, p, x, cache=None, return_cache=False, chunk=64):
+    """Chunkwise-parallel mLSTM.  x: (B, S, d) -> (B, S, d)."""
+    di, H, dh = mlstm_dims(cfg)
+    B, S, _ = x.shape
+    conv_state = cache["conv"] if cache is not None else None
+    q, k, v, log_i, log_f, z, new_conv = _mlstm_proj(cfg, p, x, conv_state)
+
+    L = min(chunk, S)
+    nchunks = math.ceil(S / L)
+    pad = nchunks * L - S
+    if pad:
+        q, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for a in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-60.0)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(a):
+        return a.reshape(B, nchunks, L, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, ic, fc = map(to_chunks, (q, k, v, log_i, log_f))
+    if cache is not None:
+        st0 = {n: cache[n] for n in ("C", "n", "m")}
+    else:
+        e = empty_mlstm_state(cfg, B)
+        st0 = {n: e[n] for n in ("C", "n", "m")}
+
+    def chunk_step(st, xs):
+        qb, kb, vb, gi, gf = xs       # (B,L,H,dh) x3, (B,L,H) x2
+        qf, kf, vf = (a.astype(jnp.float32) for a in (qb, kb, vb))
+        b = jnp.cumsum(gf, axis=1)    # inclusive cumulative log f
+        gmb = jax.lax.cummax(gi - b, axis=1)
+        m_new = b + jnp.maximum(st["m"][:, None], gmb)         # (B,L,H)
+        inter = jnp.exp(b + st["m"][:, None] - m_new)          # (B,L,H)
+        # gate[s,t] = exp(b_s - b_t + g_t - m_new[s]),  t <= s
+        dmat = (b[:, :, None] - b[:, None, :] + gi[:, None, :]
+                - m_new[:, :, None])                           # (B,S,T,H)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        gate = jnp.where(mask[None, :, :, None], jnp.exp(dmat), 0.0)
+        sc = jnp.einsum("bshe,bthe->bsth", qf, kf)             # q'.k
+        att = gate * sc                                        # (B,S,T,H)
+        num = (jnp.einsum("bsth,bthe->bshe", att, vf)
+               + inter[..., None] * jnp.einsum("bshe,bhef->bshf", qf, st["C"]))
+        qn = jnp.einsum("bshe,bhe->bsh", qf, st["n"])
+        den = att.sum(2) + inter * qn                          # (B,S,H)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        # ---- state update at chunk end ----
+        m_next = m_new[:, -1]
+        w_end = gate[:, -1]                                    # (B,T,H)
+        C_next = (inter[:, -1][:, :, None, None] * st["C"]
+                  + jnp.einsum("bth,bthe,bthf->bhef", w_end, kf, vf))
+        n_next = (inter[:, -1][..., None] * st["n"]
+                  + jnp.einsum("bth,bthe->bhe", w_end, kf))
+        return {"C": C_next, "n": n_next, "m": m_next}, h
+
+    st_fin, hs = jax.lax.scan(chunk_step, st0, (qc, kc, vc, ic, fc))
+    h = hs.swapaxes(0, 1).reshape(B, nchunks * L, H, dh)[:, :S]
+    out = _finish(cfg, p, h.astype(cfg.compute_dtype), z)
+    if return_cache:
+        return out, {**st_fin, "conv": new_conv}
+    return out
+
+
+def mlstm_decode(cfg, p, x, cache):
+    """Single-token decode.  x: (B, 1, d)."""
+    q, k, v, log_i, log_f, z, new_conv = _mlstm_proj(cfg, p, x, cache["conv"])
+    qf, kf, vf = (a[:, 0].astype(jnp.float32) for a in (q, k, v))  # (B,H,dh)
+    gi, gf = log_i[:, 0], log_f[:, 0]                              # (B,H)
+    m_new = jnp.maximum(gf + cache["m"], gi)
+    f_s = jnp.exp(gf + cache["m"] - m_new)
+    i_s = jnp.exp(gi - m_new)
+    C = f_s[:, :, None, None] * cache["C"] + i_s[:, :, None, None] * \
+        jnp.einsum("bhe,bhf->bhef", kf, vf)
+    n = f_s[:, :, None] * cache["n"] + i_s[:, :, None] * kf
+    num = jnp.einsum("bhe,bhef->bhf", qf, C)
+    den = jnp.abs(jnp.einsum("bhe,bhe->bh", qf, n))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    out = _finish(cfg, p, h[:, None].astype(cfg.compute_dtype), z)
+    return out, {"C": C, "n": n, "m": m_new, "conv": new_conv}
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+
+def slstm_dims(cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    return d, H, d // H
+
+
+def init_slstm(cfg, key):
+    d, H, dh = slstm_dims(cfg)
+    kw, kr, kn, kf1, kf2 = jax.random.split(key, 5)
+    pd = cfg.params_dtype
+    ff = int(cfg.xlstm.proj_factor_slstm * d)
+    return {
+        "W": common.dense_init(kw, (d, 4, H, dh), d, pd),      # z i f o
+        "R": common.dense_init(kr, (4, H, dh, dh), dh, pd),
+        "bias": jnp.zeros((4, H, dh), pd)
+                 .at[2].set(jnp.linspace(3.0, 6.0, H)[:, None]),
+        "head_norm": jnp.ones((H, dh), pd),
+        "ffn_gate": common.dense_init(kf1, (d, ff), d, pd),
+        "ffn_up": common.dense_init(kf1, (d, ff), d, pd),
+        "ffn_down": common.dense_init(kf2, (ff, d), ff, pd),
+    }
+
+
+def empty_slstm_state(cfg, batch):
+    d, H, dh = slstm_dims(cfg)
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z,
+            "m": jnp.full((batch, H, dh), -1e30, jnp.float32)}
+
+
+def _slstm_cell(Rf, bias, st, wx):
+    """One timestep.  wx: (B,4,H,dh) precomputed W x_t (f32)."""
+    rec = jnp.einsum("bhe,ghef->bghf", st["h"], Rf)            # (B,4,H,dh)
+    pre = wx + rec + bias[None]
+    zt = jnp.tanh(pre[:, 0])
+    gi = pre[:, 1]
+    gf = jax.nn.log_sigmoid(pre[:, 2])
+    ot = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(gf + st["m"], gi)
+    f_s = jnp.exp(gf + st["m"] - m_new)
+    i_s = jnp.exp(gi - m_new)
+    c = f_s * st["c"] + i_s * zt
+    n = f_s * st["n"] + i_s
+    h = ot * c / jnp.maximum(n, 1e-6)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_forward(cfg, p, x, cache=None, return_cache=False):
+    """Sequential sLSTM + fused GeGLU FFN.  x: (B, S, d)."""
+    d, H, dh = slstm_dims(cfg)
+    B, S, _ = x.shape
+    wx = jnp.einsum("bsd,dghe->bsghe", x.astype(jnp.float32),
+                    p["W"].astype(jnp.float32))
+    st0 = cache if cache is not None else empty_slstm_state(cfg, B)
+    st0 = {k2: st0[k2] for k2 in ("h", "c", "n", "m")}
+    Rf = p["R"].astype(jnp.float32)
+    bias = p["bias"].astype(jnp.float32)
+
+    def step(st, wxt):
+        st = _slstm_cell(Rf, bias, st, wxt)
+        return st, st["h"]
+
+    st_fin, hs = jax.lax.scan(step, st0, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1)                                      # (B,S,H,dh)
+    out = _slstm_out(cfg, p, x, h)
+    if return_cache:
+        return out, st_fin
+    return out
+
+
+def slstm_decode(cfg, p, x, cache):
+    d, H, dh = slstm_dims(cfg)
+    wx = jnp.einsum("bsd,dghe->bsghe", x.astype(jnp.float32),
+                    p["W"].astype(jnp.float32))[:, 0]
+    st = _slstm_cell(p["R"].astype(jnp.float32),
+                     p["bias"].astype(jnp.float32),
+                     {k2: cache[k2] for k2 in ("h", "c", "n", "m")}, wx)
+    out = _slstm_out(cfg, p, x, st["h"][:, None])
+    return out, st
+
+
+def _slstm_out(cfg, p, x, h):
+    """Headwise norm + GeGLU FFN (proj factor 4/3)."""
+    dt = cfg.compute_dtype
+    d, H, dh = slstm_dims(cfg)
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
+    hn = (hf * jax.lax.rsqrt(var + 1e-6)
+          * p["head_norm"].astype(jnp.float32)).astype(dt)
+    hn = hn.reshape(x.shape[0], h.shape[1], d)
+    g = jax.nn.gelu(jnp.einsum("bsd,df->bsf", hn, p["ffn_gate"].astype(dt)))
+    u = jnp.einsum("bsd,df->bsf", hn, p["ffn_up"].astype(dt))
+    return jnp.einsum("bsf,fd->bsd", g * u, p["ffn_down"].astype(dt))

@@ -1,0 +1,53 @@
+"""Wire message schema + msgpack framing.
+
+Every overlay message is a dict with a ``type`` field; this module is the
+single source of truth for the schema (the simnet passes dicts in-process;
+the TCP transport frames them with a length-prefixed msgpack encoding).
+"""
+from __future__ import annotations
+
+import struct
+from typing import Iterator
+
+import msgpack
+
+# message types and their required fields
+SCHEMA = {
+    "onion_create": ("blob",),
+    "onion_create_fast": ("path_id", "chain", "origin", "hop"),
+    "proxy_ack": ("path_id",),
+    "clove_fwd": ("path_id", "dest_model", "clove", "msg_key"),
+    "prompt_clove": ("clove", "proxy"),
+    "response_clove": ("path_id",),
+    "fwd_request": ("payload",),
+    "hr_sync": ("from", "paths", "active", "hw"),
+}
+
+
+def validate(msg: dict) -> bool:
+    t = msg.get("type")
+    if t not in SCHEMA:
+        return False
+    return all(f in msg for f in SCHEMA[t])
+
+
+def encode(msg: dict) -> bytes:
+    body = msgpack.packb(msg, use_bin_type=True)
+    return struct.pack("<I", len(body)) + body
+
+
+class Decoder:
+    """Incremental length-prefixed decoder for a TCP byte stream."""
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> Iterator[dict]:
+        self._buf.extend(data)
+        while len(self._buf) >= 4:
+            (n,) = struct.unpack("<I", self._buf[:4])
+            if len(self._buf) < 4 + n:
+                return
+            body = bytes(self._buf[4:4 + n])
+            del self._buf[:4 + n]
+            yield msgpack.unpackb(body, raw=False)

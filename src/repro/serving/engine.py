@@ -1,0 +1,163 @@
+"""Per-node LLM serving engines.
+
+RealEngine — wraps a JAX model (repro.models.lm.LM): prefill + greedy/top-k
+decode with KV-prefix reuse.  Prefix hits restore the cached KV pytree and
+feed only the suffix (teacher-forced decode-append), so a request sharing a
+10k-token system prompt pays only for its unique tail — the mechanism whose
+*group-wide* version the HR-tree provides.
+
+LatencyEngine — a calibrated cost model (prefill/decode tokens-per-second,
+continuous-batching slots) for overlay-scale simulations where running a
+real model per node would be CPU-prohibitive; calibrated against RealEngine
+on the reduced config (see benchmarks/bench_serving_latency.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.prefix_cache import PrefixCache
+
+
+@dataclass
+class Request:
+    req_id: int
+    tokens: list
+    max_new: int = 32
+    eos_id: int = -1
+    session: Optional[str] = None
+    arrival: float = 0.0
+
+
+@dataclass
+class Result:
+    req_id: int
+    output: list
+    ttft: float = 0.0
+    total: float = 0.0
+    cached_tokens: int = 0
+    prompt_tokens: int = 0
+
+
+class RealEngine:
+    def __init__(self, cfg, model, params, cache_bytes: int = 1 << 30,
+                 max_len: int = 1024):
+        self.cfg = cfg
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.prefix_cache = PrefixCache(cache_bytes)
+        # partial-prefix KV reuse is an attention-cache property: a slot per
+        # position, masked by pos.  Recurrent states (mamba/mLSTM/sLSTM)
+        # summarize the WHOLE stream and cannot be truncated — those
+        # families only reuse on exact full-prefix hits (disabled here).
+        self.partial_reuse = all(s.mixer in ("attn", "cross_attn")
+                                 for s in cfg.pattern)
+
+        def _prefill(params, tokens):
+            return model.prefill(params, tokens, max_len=max_len,
+                                 block_q=64)
+
+        def _decode(params, cache, tok, pos):
+            return model.decode(params, cache, tok, pos)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    def _cache_nbytes(self, cache) -> int:
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+    def generate(self, req: Request, now: float = 0.0) -> Result:
+        t0 = time.monotonic()
+        toks = [int(t) for t in req.tokens]
+        matched, entry = self.prefix_cache.match(toks)
+        if entry is not None and matched >= 8 and self.partial_reuse:
+            cache = entry.handle
+            pos0 = matched
+            suffix = toks[matched:]
+        else:
+            matched = 0
+            boot = max(1, min(len(toks), 8))
+            logits, cache = self._prefill(
+                self.params, jnp.asarray([toks[:boot]], jnp.int32))
+            pos0 = boot
+            suffix = toks[boot:]
+        # teacher-forced decode-append over the (uncached) suffix
+        logits = None
+        pos = pos0
+        for t in suffix:
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray([[t]], jnp.int32),
+                jnp.asarray([pos], jnp.int32))
+            pos += 1
+        if logits is None:  # full prefix hit: replay last token for logits
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray([[toks[-1]]], jnp.int32),
+                jnp.asarray([pos - 1], jnp.int32))
+        ttft = time.monotonic() - t0
+        out = []
+        for _ in range(req.max_new):
+            nxt = int(jnp.argmax(logits[0]))
+            out.append(nxt)
+            if nxt == req.eos_id or pos >= self.max_len - 1:
+                break
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray([[nxt]], jnp.int32),
+                jnp.asarray([pos], jnp.int32))
+            pos += 1
+        full = toks + out
+        self.prefix_cache.insert(full, cache, self._cache_nbytes(cache))
+        return Result(req.req_id, out, ttft=ttft,
+                      total=time.monotonic() - t0,
+                      cached_tokens=matched, prompt_tokens=len(toks))
+
+
+@dataclass
+class LatencyEngineConfig:
+    prefill_tps: float = 8_000.0     # prompt tokens/s (single request)
+    decode_tps: float = 60.0         # generated tokens/s per request
+    batch_slots: int = 8             # continuous-batching concurrency
+    overhead_s: float = 0.02
+    hw_score: float = 5.0            # the paper's 1..10 capacity score
+
+
+class LatencyEngine:
+    """Deterministic continuous-batching cost model on the simnet clock.
+
+    ``submit`` returns (ttft, completion_time_offset, cached_tokens) given
+    the current queue state; slot release is the caller's responsibility
+    via the returned completion offset (model_node schedules it)."""
+
+    def __init__(self, ecfg: LatencyEngineConfig,
+                 cache_bytes: int = 1 << 28):
+        self.ecfg = ecfg
+        self.prefix_cache = PrefixCache(cache_bytes)
+        self.busy: list[float] = []       # completion times of active slots
+        self.active = 0
+
+    def service_times(self, n_prompt: int, n_cached: int, n_out: int,
+                      now: float) -> tuple[float, float]:
+        e = self.ecfg
+        scale = e.hw_score / 5.0
+        # slot admission: wait for a free slot if all are busy
+        self.busy = [t for t in self.busy if t > now]
+        if len(self.busy) >= e.batch_slots:
+            start = sorted(self.busy)[len(self.busy) - e.batch_slots]
+        else:
+            start = now
+        # batching interference: decode tps degrades with occupancy
+        occupancy = min(len(self.busy) + 1, e.batch_slots)
+        interference = 1.0 + 0.15 * (occupancy - 1)
+        t_prefill = (n_prompt - n_cached) / (e.prefill_tps * scale)
+        t_decode = n_out * interference / (e.decode_tps * scale)
+        ttft = (start - now) + e.overhead_s + t_prefill
+        total = ttft + t_decode
+        self.busy.append(now + total)
+        return ttft, total

@@ -1,0 +1,117 @@
+"""Node-local KV-prefix cache: block-hash radix index + LRU by bytes.
+
+This is the *local* structure whose prefix set each model node summarizes
+into its HR-tree broadcast (core/hrtree.py).  Lookup is O(len/B): the query
+token stream is rolled into per-block chain hashes (strong SHA-based, no
+false positives locally — the 8-bit compaction only happens in the HR-tree
+sketch); entries register their KV handle at block granularity.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+BLOCK = 32
+
+
+def _chain_hashes(tokens: Sequence[int], block: int = BLOCK) -> list[bytes]:
+    """Chain hash at every complete block boundary."""
+    out = []
+    h = hashlib.sha256()
+    n = len(tokens) // block
+    for b in range(n):
+        chunk = tokens[b * block:(b + 1) * block]
+        h.update(",".join(str(int(t)) for t in chunk).encode())
+        out.append(h.digest()[:16])
+    return out
+
+
+@dataclass
+class Entry:
+    handle: object            # engine-owned KV handle (cache pytree + meta)
+    length: int               # tokens covered (block-aligned)
+    nbytes: int
+    keys: list = field(default_factory=list)   # chain keys registered
+    last_used: float = field(default_factory=time.monotonic)
+    hits: int = 0
+
+
+class PrefixCache:
+    def __init__(self, max_bytes: int = 1 << 30, block: int = BLOCK):
+        self.max_bytes = max_bytes
+        self.block = block
+        self._by_chain: dict[bytes, Entry] = {}
+        self.used_bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.total_tokens = 0
+
+    # ---- lookup ----
+    def match(self, tokens: Sequence[int]) -> tuple[int, Optional[Entry]]:
+        """Longest cached block-aligned prefix of ``tokens``.
+
+        Every block depth of every inserted stream is indexed (radix
+        semantics), so a request sharing only the first few blocks of a
+        cached entry still reuses them."""
+        chains = _chain_hashes(tokens, self.block)
+        self.total_tokens += len(tokens)
+        for d in range(len(chains), 0, -1):
+            e = self._by_chain.get(chains[d - 1])
+            if e is not None:
+                e.last_used = time.monotonic()
+                e.hits += 1
+                self.hits += 1
+                matched = min(d * self.block, e.length)
+                self.hit_tokens += matched
+                return matched, e
+        self.misses += 1
+        return 0, None
+
+    # ---- insert ----
+    def insert(self, tokens: Sequence[int], handle, nbytes: int):
+        chains = _chain_hashes(tokens, self.block)
+        if not chains:
+            return
+        length = (len(tokens) // self.block) * self.block
+        entry = Entry(handle, length, nbytes, keys=list(chains))
+        for key in chains:
+            old = self._by_chain.get(key)
+            if old is not None and old is not entry and key == old.keys[-1]:
+                self._drop(old)
+            self._by_chain[key] = entry
+        self.used_bytes += nbytes
+        self._evict()
+
+    def _drop(self, e: Entry):
+        for k in e.keys:
+            if self._by_chain.get(k) is e:
+                self._by_chain.pop(k)
+        self.used_bytes -= e.nbytes
+
+    def _evict(self):
+        if self.used_bytes <= self.max_bytes:
+            return
+        entries = sorted({id(e): e for e in self._by_chain.values()}.values(),
+                         key=lambda e: e.last_used)
+        for e in entries:
+            if self.used_bytes <= self.max_bytes:
+                break
+            self._drop(e)
+
+    # ---- HR-tree sync ----
+    def cached_prefixes(self) -> list[tuple]:
+        """(token-length, entry) view used to build HR-tree broadcasts —
+        callers keep the original token streams alongside handles."""
+        return [(e.length, e) for e in self._by_chain.values()]
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    @property
+    def token_hit_rate(self) -> float:
+        return self.hit_tokens / self.total_tokens if self.total_tokens else 0.0

@@ -1,0 +1,128 @@
+"""Continuous-batching scheduler for the real engine.
+
+Admission queue -> active batch of up to ``max_active`` requests; each
+scheduler tick runs one decode round for every active request (the
+continuous-batching semantics of vLLM/SGLang, serialized on CPU), admits
+new requests as slots free, applies session stickiness and a
+longest-prefix-cache-match admission preference (the node-local analogue
+of the HR-tree's group-level cache affinity).
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.serving.engine import RealEngine, Request, Result
+
+
+@dataclass
+class _Active:
+    req: Request
+    cache: object
+    logits: object
+    pos: int
+    out: list = field(default_factory=list)
+    t_start: float = 0.0
+    ttft: float = 0.0
+    cached_tokens: int = 0
+
+
+class Scheduler:
+    def __init__(self, engine: RealEngine, max_active: int = 4,
+                 prefer_cache_hits: bool = True):
+        self.engine = engine
+        self.max_active = max_active
+        self.prefer_cache_hits = prefer_cache_hits
+        self.queue: collections.deque = collections.deque()
+        self.active: list[_Active] = []
+        self.done: list[Result] = []
+        self.metrics = {"admitted": 0, "completed": 0, "queue_peak": 0}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+        self.metrics["queue_peak"] = max(self.metrics["queue_peak"],
+                                         len(self.queue))
+
+    # ------------------------------------------------------------------
+    def _admit_one(self):
+        if not self.queue or len(self.active) >= self.max_active:
+            return
+        ix = 0
+        if self.prefer_cache_hits and len(self.queue) > 1:
+            best, best_len = 0, -1
+            for i, r in enumerate(self.queue):
+                ln, _ = self.engine.prefix_cache.match(
+                    [int(t) for t in r.tokens])
+                if ln > best_len:
+                    best, best_len = i, ln
+            ix = best
+        req = self.queue[ix]
+        del self.queue[ix]
+        t0 = time.monotonic()
+        eng = self.engine
+        toks = [int(t) for t in req.tokens]
+        matched, entry = eng.prefix_cache.match(toks)
+        if entry is not None and matched >= 8 and eng.partial_reuse:
+            cache, pos, suffix = entry.handle, matched, toks[matched:]
+        else:
+            matched = 0
+            boot = max(1, min(len(toks), 8))
+            _, cache = eng._prefill(eng.params,
+                                    jnp.asarray([toks[:boot]], jnp.int32))
+            pos, suffix = boot, toks[boot:]
+        logits = None
+        for t in suffix:
+            logits, cache = eng._decode(eng.params, cache,
+                                        jnp.asarray([[t]], jnp.int32),
+                                        jnp.asarray([pos], jnp.int32))
+            pos += 1
+        if logits is None:
+            logits, cache = eng._decode(eng.params, cache,
+                                        jnp.asarray([[toks[-1]]], jnp.int32),
+                                        jnp.asarray([pos - 1], jnp.int32))
+        self.active.append(_Active(req, cache, logits, pos,
+                                   t_start=t0,
+                                   ttft=time.monotonic() - t0,
+                                   cached_tokens=matched))
+        self.metrics["admitted"] += 1
+
+    def step(self):
+        """One continuous-batching round: admit + one decode per active."""
+        while len(self.active) < self.max_active and self.queue:
+            self._admit_one()
+        finished = []
+        for a in self.active:
+            nxt = int(jnp.argmax(a.logits[0]))
+            a.out.append(nxt)
+            hit_eos = (nxt == a.req.eos_id
+                       or len(a.out) >= a.req.max_new
+                       or a.pos >= self.engine.max_len - 1)
+            if hit_eos:
+                finished.append(a)
+                continue
+            a.logits, a.cache = self.engine._decode(
+                self.engine.params, a.cache,
+                jnp.asarray([[nxt]], jnp.int32),
+                jnp.asarray([a.pos], jnp.int32))
+            a.pos += 1
+        for a in finished:
+            self.active.remove(a)
+            full = [int(t) for t in a.req.tokens] + a.out
+            self.engine.prefix_cache.insert(
+                full, a.cache, self.engine._cache_nbytes(a.cache))
+            self.done.append(Result(a.req.req_id, a.out, ttft=a.ttft,
+                                    total=time.monotonic() - a.t_start,
+                                    cached_tokens=a.cached_tokens,
+                                    prompt_tokens=len(a.req.tokens)))
+            self.metrics["completed"] += 1
+
+    def run(self, max_rounds: int = 10_000):
+        rounds = 0
+        while (self.queue or self.active) and rounds < max_rounds:
+            self.step()
+            rounds += 1
+        return self.done

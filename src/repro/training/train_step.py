@@ -1,0 +1,63 @@
+"""Training step: mixed-precision loss/grad + AdamW, with optional
+microbatch gradient accumulation and int8 gradient compression hooks."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import lm_loss
+from repro.training import optimizer as opt
+
+
+def make_train_step(cfg, model, adamw: opt.AdamWConfig,
+                    microbatches: int = 1, compress_grads=None,
+                    block_q: int = 512):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, m).
+
+    batch: {"tokens": (B, S) int32, "labels": (B, S) int32, [aux inputs]}.
+    ``compress_grads`` (training/compression.py) is applied to the gradient
+    pytree before the optimizer — int8 + error feedback for the DP
+    all-reduce path.
+    """
+
+    def loss_fn(params, batch):
+        aux = {k: v for k, v in batch.items()
+               if k not in ("tokens", "labels")}
+        return lm_loss(cfg, model, params, batch["tokens"], batch["labels"],
+                       aux=aux or None, remat=True, block_q=block_q)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        B = batch["tokens"].shape[0]
+        assert B % microbatches == 0
+        mb = B // microbatches
+        split = jax.tree.map(
+            lambda x: x.reshape(microbatches, mb, *x.shape[1:]), batch)
+
+        def body(carry, mb_batch):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, mb_batch)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (grads, loss_sum), _ = jax.lax.scan(body, (zeros, 0.0), split)
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        return loss_sum / microbatches, {}, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        if compress_grads is not None:
+            grads = compress_grads(grads)
+        params, opt_state, om = opt.apply_updates(adamw, params, grads,
+                                                  opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step

@@ -1,0 +1,137 @@
+"""Unit + property tests for the S-IDA stack: GF(256), ChaCha20, Shamir,
+Rabin IDA, S-IDA."""
+import itertools
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chacha, gf256, ida, shamir, sida
+
+
+# ---------------------------------------------------------------- GF(256)
+def test_gf256_mul_inverse():
+    a = np.arange(1, 256, dtype=np.uint8)
+    for x in [1, 2, 3, 7, 131, 255]:
+        prod = gf256.mul(gf256.mul(a, np.uint8(x)),
+                         gf256.inv(np.uint8(x)))
+        assert np.array_equal(prod, a)
+
+
+def test_gf256_distributive():
+    rng = np.random.default_rng(0)
+    a, b, c = (rng.integers(0, 256, 64, dtype=np.uint8) for _ in range(3))
+    left = gf256.mul(a, b ^ c)
+    right = gf256.mul(a, b) ^ gf256.mul(a, c)
+    assert np.array_equal(left, right)
+
+
+def test_gf256_matrix_inverse():
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        while True:
+            M = rng.integers(0, 256, (5, 5), dtype=np.uint8)
+            try:
+                Mi = gf256.mat_inv(M)
+                break
+            except np.linalg.LinAlgError:
+                continue
+        assert np.array_equal(gf256.matmul(M, Mi),
+                              np.eye(5, dtype=np.uint8))
+
+
+# ---------------------------------------------------------------- ChaCha20
+def test_chacha_rfc8439_vector():
+    key = bytes(range(32))
+    nonce = bytes.fromhex("000000090000004a00000000")
+    ks = chacha.keystream(key, nonce, 1, counter=1)
+    expect = bytes.fromhex(
+        "10f1e7e4d13b5915500fdd1fa32071c4c7d1f4c733c068030422aa9ac3d46c4e"
+        "d2826446079faa0914c2d705d98b02a2b5129cd1de164eb9cbd083e8a2503c4e")
+    assert ks[:64] == expect
+
+
+@given(st.binary(min_size=0, max_size=2048))
+@settings(max_examples=25, deadline=None)
+def test_chacha_roundtrip(data):
+    key = bytes(range(32))
+    ct = chacha.encrypt(data, key)
+    assert chacha.decrypt(ct, key) == data
+    if len(data) > 8:
+        assert ct[12:] != data  # actually encrypted
+
+
+# ---------------------------------------------------------------- Shamir
+@given(st.binary(min_size=1, max_size=128),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=4))
+@settings(max_examples=25, deadline=None)
+def test_shamir_any_k_of_n(secret, k, extra):
+    n = k + extra
+    shares = shamir.split(secret, n, k)
+    # recover from the LAST k shares (arbitrary subset)
+    assert shamir.combine(shares[-k:], k) == secret
+
+
+def test_shamir_below_threshold_no_info():
+    secret = b"\x00" * 32
+    shares = shamir.split(secret, 5, 3)
+    # 2 shares: reconstructing with a wrong 3rd share gives garbage, and
+    # the 2 shares alone are uniformly distributed (can't equal secret
+    # deterministically) — statistical smoke check over trials
+    hits = 0
+    for t in range(50):
+        s2 = shamir.split(os.urandom(32), 5, 3)[:2]
+        if shamir.combine(s2 + [(5, os.urandom(32))], 3) == secret:
+            hits += 1
+    assert hits == 0
+
+
+# ---------------------------------------------------------------- Rabin IDA
+@given(st.binary(min_size=0, max_size=512),
+       st.integers(min_value=1, max_value=5),
+       st.integers(min_value=0, max_value=3))
+@settings(max_examples=25, deadline=None)
+def test_ida_roundtrip(data, k, extra):
+    n = k + extra
+    frags = ida.split(data, n, k)
+    assert ida.combine(frags[-k:], n, k) == data
+
+
+def test_ida_every_combination():
+    data = os.urandom(199)
+    n, k = 6, 3
+    frags = ida.split(data, n, k)
+    for combo in itertools.combinations(range(n), k):
+        assert ida.combine([frags[i] for i in combo], n, k) == data
+
+
+def test_ida_fragment_size_near_optimal():
+    data = os.urandom(3000)
+    frags = ida.split(data, 4, 3)
+    assert len(frags[0][1]) <= len(data) // 3 + 8
+
+
+# ---------------------------------------------------------------- S-IDA
+@given(st.binary(min_size=0, max_size=1024),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=3))
+@settings(max_examples=25, deadline=None)
+def test_sida_roundtrip(msg, k, extra):
+    n = k + extra
+    cloves = sida.make_cloves(msg, n, k)
+    assert sida.recover(cloves[-k:]) == msg
+    assert sida.recover(cloves) == msg
+
+
+def test_sida_below_k_fails():
+    cloves = sida.make_cloves(b"secret prompt", 4, 3)
+    with pytest.raises(ValueError):
+        sida.recover(cloves[:2])
+
+
+def test_sida_clove_wire_roundtrip():
+    cloves = sida.make_cloves(b"x" * 100, 4, 3)
+    decoded = [sida.Clove.decode(c.encode()) for c in cloves]
+    assert sida.recover(decoded[:3]) == b"x" * 100

@@ -1,0 +1,134 @@
+"""HR-tree, Sentry, and forwarding-logic tests (+ hypothesis invariants)."""
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hrtree, sentry
+from repro.core.forwarding import (Decision, ForwardingConfig, PeerInfo,
+                                   decide)
+
+
+def make_tree(lengths=(32,), default_chunk=16):
+    return hrtree.HRTree(lengths, bits=8, default_chunk=default_chunk)
+
+
+def test_insert_then_search_finds_holder():
+    t = make_tree()
+    toks = list(range(128))
+    t.insert_tokens(toks, "A")
+    holders, d = t.search_tokens(toks, tau=2)
+    assert "A" in holders and d >= 2
+
+
+def test_prefix_semantics():
+    t = make_tree()
+    shared = list(range(64))
+    t.insert_tokens(shared + [500] * 32, "A")
+    # query sharing only the 64-token prefix still matches at partial depth
+    holders, d = t.search_tokens(shared + [900] * 32, tau=1)
+    assert "A" in holders
+    # totally different prompt: no match
+    holders, d = t.search_tokens([7] * 128, tau=1)
+    assert holders == []
+
+
+def test_export_merge_roundtrip():
+    t = make_tree()
+    toks = list(range(96))
+    t.insert_tokens(toks, "A")
+    paths = t.export_paths("A")
+    t2 = make_tree()
+    t2.merge_paths(paths, "A")
+    h1, d1 = t.search_tokens(toks, tau=1)
+    h2, d2 = t2.search_tokens(toks, tau=1)
+    assert h1 == h2 and d1 == d2
+
+
+def test_remove_holder_and_expire():
+    t = make_tree()
+    t.insert_tokens(list(range(64)), "A", ts=1.0)
+    t.insert_tokens(list(range(64)), "B", ts=5.0)
+    t.remove_holder("A")
+    holders, _ = t.search_tokens(list(range(64)), tau=1)
+    assert holders == ["B"]
+    t.expire(before_ts=10.0)
+    holders, _ = t.search_tokens(list(range(64)), tau=1)
+    assert holders == []
+
+
+def test_false_positive_rate_math():
+    t = make_tree()
+    assert t.false_positive_rate(3) == (1 / 256) ** 3
+
+
+@given(st.lists(st.integers(0, 1000), min_size=16, max_size=200),
+       st.integers(0, 3))
+@settings(max_examples=30, deadline=None)
+def test_hrtree_inserted_always_found(tokens, tau):
+    t = make_tree()
+    t.insert_tokens(tokens, "X")
+    n_hashes = len(hrtree.preprocess(tokens, t.lengths, t.bits,
+                                     t.default_chunk))
+    holders, d = t.search_tokens(tokens, tau=tau)
+    assert d == n_hashes
+    if d >= tau:
+        assert "X" in holders
+
+
+# ---------------------------------------------------------------- Sentry
+def test_sentry_length_equations():
+    assert sentry.build_lengths([32, 64, 128], 8) == [32, 8, 24, 8, 56]
+    assert sentry.build_lengths([], 8) == []
+    assert sentry.build_lengths([16], 4) == [16]
+
+
+def test_sentry_detects_common_prefix():
+    s = sentry.Sentry(sentry.SentryConfig(min_support=5, min_len=16,
+                                          probe_stride=16))
+    common = tuple(range(48))
+    rng = random.Random(0)
+    for i in range(40):
+        tail = tuple(rng.randrange(2000, 3000) for _ in range(40))
+        s.observe(common + tail)
+    lengths = s.detect_prompt_lengths()
+    assert lengths and max(lengths) >= 32  # found the shared prefix
+
+
+# ---------------------------------------------------------------- Forwarding
+def _tree_with(holder, tokens):
+    t = make_tree()
+    t.insert_tokens(tokens, holder)
+    return t
+
+
+def test_forward_match_prefers_cache_holder():
+    toks = list(range(128))
+    t = _tree_with("A", toks)
+    peers = {"A": PeerInfo("A", 5, 3), "B": PeerInfo("B", 5, 0)}
+    d = decide(ForwardingConfig(load_threshold=4.0), t, peers, toks)
+    assert d.reason == "cache_hit" and d.target == "A"
+
+
+def test_forward_overloaded_holder_falls_back():
+    toks = list(range(128))
+    t = _tree_with("A", toks)
+    peers = {"A": PeerInfo("A", 5, 100), "B": PeerInfo("B", 5, 1)}
+    d = decide(ForwardingConfig(load_threshold=4.0), t, peers, toks)
+    assert d.reason == "load_balance" and d.target == "B"
+
+
+def test_forward_relative_load_respects_hw_score():
+    toks = [9] * 64  # miss
+    t = make_tree()
+    # A: 10 active on hw 10 (rel 1.0); B: 2 active on hw 1 (rel 2.0)
+    peers = {"A": PeerInfo("A", 10, 10), "B": PeerInfo("B", 1, 2)}
+    d = decide(ForwardingConfig(), t, peers, toks)
+    assert d.target == "A"
+
+
+def test_forward_tiebreak_spreads():
+    t = make_tree()
+    peers = {f"n{i}": PeerInfo(f"n{i}", 5, 0) for i in range(4)}
+    targets = {decide(ForwardingConfig(), t, peers,
+                      [seed] * 40).target for seed in range(40)}
+    assert len(targets) >= 3

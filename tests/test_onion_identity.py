@@ -1,0 +1,87 @@
+"""Ed25519 / X25519 / VRF / onion-establishment tests."""
+import pytest
+
+from repro.core import ed25519, onion, vrf
+
+
+def test_ed25519_sign_verify():
+    sk = ed25519.SigningKey(b"\x01" * 32)
+    sig = sk.sign(b"hello")
+    assert ed25519.verify(sk.public, b"hello", sig)
+    assert not ed25519.verify(sk.public, b"hellO", sig)
+    assert not ed25519.verify(sk.public, b"hello", sig[:-1] + b"\x00")
+
+
+def test_x25519_rfc7748_vector():
+    k = bytes.fromhex("a546e36bf0527c9d3b16154b82465edd"
+                      "62144c0ac1fc5a18506a2244ba449ac4")
+    u = bytes.fromhex("e6db6867583030db3594c1a424b15f7c"
+                      "726624ec26b3353b10a903a6d0ab1c4c")
+    out = ed25519.x25519(k, u)
+    assert out == bytes.fromhex("c3da55379de9c6908e94ea4df28d084f"
+                                "32eccf03491c71f754b4075577a28552")
+
+
+def test_dh_agreement():
+    a_sk, a_pub = ed25519.dh_keypair(b"\x02" * 32)
+    b_sk, b_pub = ed25519.dh_keypair(b"\x03" * 32)
+    assert ed25519.dh_shared(a_sk, b_pub) == ed25519.dh_shared(b_sk, a_pub)
+
+
+def test_vrf_prove_verify():
+    sk = ed25519.SigningKey(b"\x04" * 32)
+    beta, proof = vrf.prove(sk, b"epoch-seed")
+    assert vrf.verify(sk.public, b"epoch-seed", beta, proof)
+    assert not vrf.verify(sk.public, b"other-seed", beta, proof)
+    sk2 = ed25519.SigningKey(b"\x05" * 32)
+    assert not vrf.verify(sk2.public, b"epoch-seed", beta, proof)
+
+
+def test_vrf_leader_uniform():
+    from collections import Counter
+    c = Counter(vrf.leader_index([bytes([i]) * 4], 4) for i in range(64))
+    assert len(c) == 4  # all leader slots reachable
+
+
+def test_onion_establishment_peel_chain():
+    hops, sks = [], {}
+    for i in range(3):
+        s, p = ed25519.dh_keypair(bytes([10 + i]) * 32)
+        hops.append((f"r{i}", p))
+        sks[f"r{i}"] = s
+    pid, first, blob = onion.build_establishment("user", b"\xAA" * 32, hops)
+    assert first == "r0"
+    ids = ["user", "r0", "r1", "r2"]
+    for i in range(3):
+        p, pred, succ, inner, pay = onion.peel_establishment(blob, sks[f"r{i}"])
+        assert p == pid
+        assert pred == ids[i]
+        if i < 2:
+            assert succ == ids[i + 2]
+            blob = inner
+        else:
+            assert succ is None
+            assert pay[8:] == b"\xAA" * 32  # nonce || user pub
+
+
+def test_onion_wrong_key_fails_or_garbage():
+    hops, sks = [], {}
+    for i in range(3):
+        s, p = ed25519.dh_keypair(bytes([20 + i]) * 32)
+        hops.append((f"r{i}", p))
+        sks[f"r{i}"] = s
+    _, _, blob = onion.build_establishment("user", b"\xBB" * 32, hops)
+    wrong_sk, _ = ed25519.dh_keypair(b"\x99" * 32)
+    with pytest.raises(Exception):
+        pid, pred, succ, inner, pay = onion.peel_establishment(blob, wrong_sk)
+        # decryption with the wrong key must not produce a valid layer
+        assert succ in ("r1",) and pred == "user"
+
+
+def test_relay_state_bidirectional():
+    rs = onion.RelayState()
+    rs.install(b"p" * 16, "prev", "next")
+    assert rs.next_hop(b"p" * 16, "prev") == "next"
+    assert rs.next_hop(b"p" * 16, "next") == "prev"
+    assert rs.next_hop(b"p" * 16, "outside") == "prev"
+    assert rs.next_hop(b"q" * 16, "prev") is None

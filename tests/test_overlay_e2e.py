@@ -1,0 +1,129 @@
+"""Overlay integration: anonymity plumbing, S-IDA delivery under drops,
+HR-tree forwarding, session affinity, churn survival, verification e2e."""
+import random
+
+import pytest
+
+from repro.core import anonymity
+from repro.net.simnet import ChurnProcess, SimNet
+from repro.overlay.network import OverlayConfig, build_overlay
+
+
+@pytest.fixture(scope="module")
+def overlay():
+    return build_overlay(OverlayConfig(n_users=30, n_models=4,
+                                       use_crypto=False, seed=3))
+
+
+def _roundtrip(ov, i, tokens, session=None):
+    got = []
+    u = ov.users[i]
+    u.on_response = lambda _n, p: got.append(p)
+    u.send_prompt(ov.net, tokens, session=session,
+                  extra_meta={"max_new": 4})
+    ov.net.run_until(ov.net.t + 60)
+    return got
+
+
+def test_request_response_roundtrip(overlay):
+    got = _roundtrip(overlay, 0, [1, 2, 3] * 30)
+    assert len(got) == 1
+    assert got[0]["output"]
+
+
+def test_model_never_learns_user_identity(overlay):
+    """The recovered request payload at the model node must not contain the
+    user id — only proxy ids."""
+    seen = {}
+    m = overlay.models[0]
+    orig = m._process
+
+    def spy(net, payload, forwarded=False):
+        seen.update(payload)
+        return orig(net, payload, forwarded=forwarded)
+
+    m._process = spy
+    _roundtrip(overlay, 5, [9] * 64)
+    m._process = orig
+    if seen:  # our request may have landed on another node; check fields
+        blob = str(seen)
+        assert "u5" not in blob.replace("u5:", "")  # only in proxy ids? no:
+    # structural check: payload schema has no sender field
+    assert "sender" not in seen and "user" not in seen
+
+
+def test_session_affinity(overlay):
+    got1 = _roundtrip(overlay, 7, [4] * 100, session="sess-x")
+    assert got1
+    server1 = got1[0]["server"]
+    got2 = _roundtrip(overlay, 7, [4] * 100 + [5, 6], session="sess-x")
+    assert got2 and got2[0]["server"] == server1
+
+
+def test_clove_delivery_survives_path_failures():
+    ov = build_overlay(OverlayConfig(n_users=30, n_models=2, n_proxies=6,
+                                     sida_n=4, sida_k=3, use_crypto=False,
+                                     seed=11))
+    u = ov.users[0]
+    # kill one relay on one of the chosen paths: with n=4, k=3, one lost
+    # path must not prevent recovery
+    victim = None
+    for p in u.live_paths():
+        nxt = p.first_hop
+        if nxt != u.node_id:
+            victim = nxt
+            break
+    ov.net.remove_node(victim)
+    got = []
+    u.on_response = lambda _n, pl: got.append(pl)
+    u.send_prompt(ov.net, [3] * 50, extra_meta={"max_new": 4})
+    ov.net.run_until(ov.net.t + 60)
+    assert len(got) == 1, "k-of-n S-IDA must survive one dead path"
+
+
+def test_hrtree_forwarding_cache_affinity():
+    ov = build_overlay(OverlayConfig(n_users=24, n_models=4,
+                                     use_crypto=False, seed=5,
+                                     sync_every=2.0))
+    shared = list(range(200))
+    # first wave: populate some node's cache + let state sync propagate
+    _roundtrip(ov, 0, shared + [11] * 40)
+    ov.net.run_until(ov.net.t + 10)
+    served_before = {m.node_id: m.metrics["served"] for m in ov.models}
+    holder = max(ov.models,
+                 key=lambda m: m.metrics["served"]).node_id
+    # second wave from DIFFERENT users, sharing the prefix
+    for i in (3, 6, 9):
+        _roundtrip(ov, i, shared + [100 + i] * 40)
+    hits = sum(m.metrics["cache_hits"] for m in ov.models)
+    assert hits >= 2, "HR-tree should route shared-prefix queries together"
+
+
+def test_churn_survival_rate():
+    ov = build_overlay(OverlayConfig(n_users=40, n_models=2, n_proxies=6,
+                                     use_crypto=False, seed=7))
+    pool = [u.node_id for u in ov.users[10:]]  # churnable users
+    # ~25%/min relative churn — well above the paper's 6.4%/min regime
+    churn = ChurnProcess(ov.net, pool, rate_per_min=10, seed=2)
+    churn.start()
+    ok = 0
+    total = 10
+    for i in range(total):
+        u = ov.users[i % 10]
+        u.maintain(ov.net)          # periodic proxy refresh (§5.2)
+        ov.net.run_until(ov.net.t + 2)
+        got = _roundtrip(ov, i % 10, [i] * 60)
+        ok += 1 if got else 0
+    assert ok >= total * 0.6  # redundancy keeps most requests alive
+
+
+def test_anonymity_metric_ordering():
+    rng = random.Random(0)
+    N, f = 2000, 0.05
+    gt = sum(anonymity.gentorrent_anonymity(N, f, 4, 3, rng)
+             for _ in range(30)) / 30
+    on = sum(anonymity.onion_anonymity(N, f, 3, rng) for _ in range(30)) / 30
+    gc = sum(anonymity.garlic_anonymity(N, f, 4, 3, rng)
+             for _ in range(30)) / 30
+    assert gt > 0.9
+    assert gt >= gc  # per Fig 9 ordering

@@ -1,0 +1,86 @@
+"""Registry (regions/groups/signed lists) + property tests for consensus
+safety and the anonymity metric."""
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import anonymity, ed25519
+from repro.core.consensus import Challenge, SignedResponse, \
+    VerificationCommittee
+from repro.overlay.registry import (MODEL_GROUP_MAX, NodeRecord, Registry,
+                                    SignedList)
+
+
+def _mk_registry(n_vn=4, use_crypto=True):
+    keys = {f"vn{i}": ed25519.SigningKey(bytes([50 + i]) * 32)
+            for i in range(n_vn)}
+    return Registry(keys, use_crypto=use_crypto)
+
+
+def test_signed_list_verifies_and_tamper_fails():
+    reg = _mk_registry()
+    for i in range(5):
+        reg.register_user(NodeRecord(f"u{i}", dh_pub=bytes([i]) * 32))
+    sl = reg.user_list()
+    assert sl.verify(reg.committee_pubs)
+    # tamper: drop a record
+    bad = SignedList(sl.records[:-1], sl.signatures)
+    assert not bad.verify(reg.committee_pubs)
+
+
+def test_minority_signatures_rejected():
+    reg = _mk_registry(n_vn=4)
+    reg.register_user(NodeRecord("u0", dh_pub=b"\x01" * 32))
+    sl = reg.user_list()
+    # keep only 2 of 4 signatures: 2*3 <= 2*4 -> invalid
+    sl.signatures = dict(list(sl.signatures.items())[:2])
+    assert not sl.verify(reg.committee_pubs)
+
+
+def test_model_group_splitting():
+    reg = _mk_registry(use_crypto=False)
+    for i in range(120):
+        reg.register_model(NodeRecord(f"m{i}", llm="llama",
+                                      region=f"r{i % 2}"))
+    groups = reg.model_groups("llama")
+    assert all(len(g) <= MODEL_GROUP_MAX for g in groups)
+    assert sum(len(g) for g in groups) == 120
+    # regions never mix within a group
+    for g in groups:
+        assert len({r.region for r in g}) == 1
+
+
+# ---------------------------------------------------------------- consensus
+@given(st.integers(min_value=4, max_value=10),
+       st.data())
+@settings(max_examples=15, deadline=None)
+def test_consensus_safety_under_f_byzantine(n, data):
+    """With <= f byzantine members (n >= 3f+1), honest epochs commit and
+    committed scores equal the honest scoring function."""
+    f = (n - 1) // 3
+    byz = set(data.draw(st.lists(st.integers(0, n - 1), max_size=f,
+                                 unique=True)))
+
+    def fn(pairs):
+        return 0.7
+    com = VerificationCommittee(n, [fn] * n, byzantine=byz)
+    com.agree_challenges([Challenge("m0", (1, 2, 3))])
+
+    def collect(leader_ix, challenges):
+        return [SignedResponse("m0", (1, 2, 3), (4, 5), b"", True)]
+
+    res = com.run_epoch(collect)
+    if com.log[-1].leader in byz:
+        assert not res.committed       # byzantine leader cannot commit junk
+    else:
+        assert res.committed
+        assert abs(res.scores["m0"] - 0.7) < 1e-9
+
+
+@given(st.floats(min_value=0.0, max_value=0.3),
+       st.integers(min_value=100, max_value=2000))
+@settings(max_examples=20, deadline=None)
+def test_anonymity_metric_bounded(f, N):
+    rng = random.Random(0)
+    v = anonymity.gentorrent_anonymity(N, f, 4, 3, rng)
+    assert 0.0 <= v <= 1.0 + 1e-9

@@ -1,0 +1,149 @@
+"""Reputation dynamics (§3.4) and Tendermint-style committee tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.consensus import Challenge, SignedResponse, \
+    VerificationCommittee
+from repro.core.reputation import ReputationConfig, ReputationTracker
+
+
+def test_good_node_converges_high():
+    tr = ReputationTracker()
+    for _ in range(20):
+        tr.update("good", 0.8)
+    assert tr.nodes["good"].score > 0.75
+    assert "good" in tr.trusted()
+
+
+def test_bad_node_punished_below_threshold():
+    tr = ReputationTracker()
+    for _ in range(6):
+        tr.update("bad", 0.15)
+    assert tr.nodes["bad"].score < 0.4  # untrusted within ~5 epochs (Fig 12)
+
+
+def test_punishment_stronger_than_plain_ema():
+    cfg = ReputationConfig()
+    tr_pun = ReputationTracker(cfg)
+    # plain EMA with the same inputs
+    r = cfg.initial
+    for _ in range(6):
+        tr_pun.update("x", 0.2)
+        r = cfg.alpha * r + cfg.beta * 0.2
+    assert tr_pun.nodes["x"].score < r
+
+
+def test_recovery_requires_consistency():
+    tr = ReputationTracker()
+    for _ in range(6):
+        tr.update("n", 0.1)
+    low = tr.nodes["n"].score
+    tr.update("n", 0.9)  # single good epoch
+    assert tr.nodes["n"].score < 0.75  # one good epoch cannot whitewash
+    assert tr.nodes["n"].score >= low
+
+
+@given(st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=1,
+                max_size=40))
+@settings(max_examples=30, deadline=None)
+def test_reputation_bounded(cs):
+    tr = ReputationTracker()
+    for c in cs:
+        s = tr.update("n", c)
+        assert 0.0 <= s <= 1.0
+
+
+# ---------------------------------------------------------------- committee
+def _mk_committee(n=4, spread=0.0, byzantine=None):
+    # score_fns keyed on response content: good responses score 0.8
+    def make_fn(i):
+        def fn(pairs):
+            base = np.mean([0.8 if sum(r) % 2 == 0 else 0.2
+                            for _, r in pairs])
+            return float(base + spread * i)
+        return fn
+    return VerificationCommittee(n, [make_fn(i) for i in range(n)],
+                                 byzantine=byzantine)
+
+
+def _collect_factory(good=True):
+    def collect(leader_ix, challenges):
+        out = []
+        for c in challenges:
+            resp = (2, 2) if good else (1, 2)   # even sum = good
+            out.append(SignedResponse(c.model_node, c.prompt, resp, b"", True))
+        return out
+    return collect
+
+
+def test_epoch_commits_and_updates_reputation():
+    com = _mk_committee()
+    com.agree_challenges([Challenge("m0", (1, 2, 3)),
+                          Challenge("m1", (4, 5, 6))])
+    res = com.run_epoch(_collect_factory(good=True))
+    assert res.committed
+    assert set(res.reputations) == {"m0", "m1"}
+    assert all(v > 0.5 for v in res.reputations.values())
+
+
+def test_prompt_mismatch_aborts():
+    com = _mk_committee()
+    com.agree_challenges([Challenge("m0", (1, 2, 3))])
+
+    def bad_collect(leader_ix, challenges):
+        return [SignedResponse("m0", (9, 9, 9), (2, 2), b"", True)]
+
+    res = com.run_epoch(bad_collect)
+    assert not res.committed and "mismatch" in res.aborted_reason
+
+
+def test_bad_signature_aborts():
+    com = _mk_committee()
+    com.agree_challenges([Challenge("m0", (1, 2, 3))])
+
+    def bad_collect(leader_ix, challenges):
+        return [SignedResponse("m0", (1, 2, 3), (2, 2), b"", False)]
+
+    res = com.run_epoch(bad_collect)
+    assert not res.committed and "signature" in res.aborted_reason
+
+
+def test_byzantine_leader_epoch_aborts_then_recovers():
+    com = _mk_committee(n=4)
+    com.agree_challenges([Challenge("m0", (1, 2, 3))])
+    # find which epoch gets a byzantine leader by marking all leaders bad
+    com.byzantine = {com.leader()}
+    res1 = com.run_epoch(_collect_factory(good=True))
+    assert not res1.committed
+    # next epoch: new leader (commit hash advanced); clear byzantine set
+    com.byzantine = set()
+    com.agree_challenges([Challenge("m0", (7, 8, 9))])
+    res2 = com.run_epoch(_collect_factory(good=True))
+    assert res2.committed
+
+
+def test_unique_challenge_prompts_enforced():
+    com = _mk_committee()
+    with pytest.raises(AssertionError):
+        com.agree_challenges([Challenge("m0", (1, 2)),
+                              Challenge("m1", (1, 2))])
+
+
+def test_dishonest_model_loses_trust_over_epochs():
+    com = _mk_committee()
+    for e in range(8):
+        com.agree_challenges([Challenge("good", (e, e, 2 * e)),
+                              Challenge("bad", (e, e, 2 * e + 1))])
+
+        def collect(leader_ix, challenges):
+            out = []
+            for c in challenges:
+                resp = (2, 2) if c.model_node == "good" else (1, 2)
+                out.append(SignedResponse(c.model_node, c.prompt, resp,
+                                          b"", True))
+            return out
+
+        com.run_epoch(collect)
+    assert "bad" in com.untrusted()
+    assert "good" not in com.untrusted()

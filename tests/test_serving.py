@@ -1,0 +1,112 @@
+"""Serving engine + prefix cache tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import base
+from repro.models.lm import build_model
+from repro.serving.engine import (LatencyEngine, LatencyEngineConfig,
+                                  RealEngine, Request)
+from repro.serving.prefix_cache import PrefixCache, _chain_hashes
+
+
+# ---------------------------------------------------------------- prefix cache
+def test_match_longest_block_aligned_prefix():
+    pc = PrefixCache(block=8)
+    toks = list(range(64))
+    pc.insert(toks, handle="H64", nbytes=100)
+    ln, e = pc.match(toks + [999] * 8)
+    assert ln == 64 and e.handle == "H64"
+    ln, e = pc.match(toks[:32] + [5] * 32)
+    assert e is None or ln <= 32
+
+
+def test_no_false_prefix_match():
+    pc = PrefixCache(block=8)
+    pc.insert(list(range(64)), handle="A", nbytes=10)
+    ln, e = pc.match([1000 + i for i in range(64)])
+    assert e is None and ln == 0
+
+
+def test_lru_eviction_by_bytes():
+    pc = PrefixCache(max_bytes=250, block=8)
+    pc.insert(list(range(16)), "A", 100)
+    pc.insert(list(range(100, 116)), "B", 100)
+    pc.match(list(range(16)))             # touch A
+    pc.insert(list(range(200, 216)), "C", 100)  # evicts B (LRU)
+    assert pc.match(list(range(16)))[1] is not None
+    assert pc.match(list(range(100, 116)))[1] is None
+
+
+@given(st.lists(st.integers(0, 100), min_size=8, max_size=80))
+@settings(max_examples=25, deadline=None)
+def test_chain_hash_prefix_property(tokens):
+    """chain hash at depth d depends only on the first d blocks."""
+    h1 = _chain_hashes(tokens, block=8)
+    h2 = _chain_hashes(tokens + [7, 7, 7], block=8)
+    for a, b in zip(h1, h2):
+        assert a == b
+
+
+# ---------------------------------------------------------------- real engine
+@pytest.fixture(scope="module")
+def tiny_engine():
+    cfg = base.get_config("gentorrent-llama3-8b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, RealEngine(cfg, model, params, max_len=128)
+
+
+def test_real_engine_generates(tiny_engine):
+    cfg, eng = tiny_engine
+    r = eng.generate(Request(1, list(range(20)), max_new=8))
+    assert len(r.output) == 8
+    assert all(0 <= t < cfg.vocab for t in r.output)
+
+
+def test_real_engine_prefix_reuse_identical_output(tiny_engine):
+    cfg, eng = tiny_engine
+    prompt = list(range(40))
+    r1 = eng.generate(Request(2, prompt, max_new=8))
+    assert r1.cached_tokens == 0
+    # same prompt again: cache hit, identical greedy output
+    r2 = eng.generate(Request(3, prompt, max_new=8))
+    assert r2.cached_tokens >= 32
+    assert r2.output == r1.output
+
+
+def test_real_engine_shared_prefix_reuse(tiny_engine):
+    cfg, eng = tiny_engine
+    shared = [7] * 40
+    eng.generate(Request(4, shared + [1, 2, 3], max_new=4))
+    r = eng.generate(Request(5, shared + [4, 5, 6], max_new=4))
+    assert r.cached_tokens >= 32  # reused the shared 40-token prefix
+
+
+# ---------------------------------------------------------------- latency engine
+def test_latency_engine_slots_queue():
+    e = LatencyEngine(LatencyEngineConfig(prefill_tps=1000, decode_tps=100,
+                                          batch_slots=2, overhead_s=0.0))
+    t1, _ = e.service_times(1000, 0, 0, now=0.0)      # 1s prefill
+    t2, _ = e.service_times(1000, 0, 0, now=0.0)
+    t3, _ = e.service_times(1000, 0, 0, now=0.0)      # must wait for a slot
+    assert t1 == pytest.approx(1.0, rel=0.2)
+    assert t3 > t1
+
+
+def test_latency_engine_cache_reduces_ttft():
+    e = LatencyEngine(LatencyEngineConfig(prefill_tps=1000, decode_tps=100,
+                                          batch_slots=8, overhead_s=0.0))
+    cold, _ = e.service_times(2000, 0, 10, now=0.0)
+    warm, _ = e.service_times(2000, 1900, 10, now=100.0)
+    assert warm < cold * 0.2
+
+
+def test_latency_engine_hw_score_scales():
+    slow = LatencyEngine(LatencyEngineConfig(hw_score=2.0))
+    fast = LatencyEngine(LatencyEngineConfig(hw_score=10.0))
+    ts, _ = slow.service_times(4000, 0, 50, now=0.0)
+    tf, _ = fast.service_times(4000, 0, 50, now=0.0)
+    assert tf < ts

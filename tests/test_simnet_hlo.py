@@ -1,0 +1,89 @@
+"""SimNet semantics + HLO analyzer correctness (trip-count scaling)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import hlo_analysis
+from repro.net.simnet import SimNet
+
+
+class Recorder:
+    def __init__(self):
+        self.got = []
+
+    def on_message(self, net, src, msg):
+        self.got.append((net.t, src, msg))
+
+
+def test_simnet_latency_and_order():
+    net = SimNet(default_latency=0.1, bandwidth_bps=1e6)
+    r = Recorder()
+    net.add_node("b", r)
+    net.send("a", "b", {"i": 1}, size_bytes=100)
+    net.send("a", "b", {"i": 2}, size_bytes=100_000)  # slower (bandwidth)
+    net.run_until(1.0)
+    assert [m["i"] for _, _, m in r.got] == [1, 2]
+    assert abs(r.got[0][0] - 0.1001) < 1e-3
+    assert r.got[1][0] > r.got[0][0]
+
+
+def test_simnet_drop_to_dead_node():
+    net = SimNet()
+    net.send("a", "ghost", {"x": 1})
+    net.run_until(1.0)
+    assert net.dropped == 1 and net.delivered == 0
+
+
+def test_simnet_timer_ordering():
+    net = SimNet()
+    seen = []
+    net.call_after(0.5, lambda: seen.append("late"))
+    net.call_after(0.1, lambda: seen.append("early"))
+    net.run_until(1.0)
+    assert seen == ["early", "late"]
+
+
+def test_hlo_analyzer_scales_loop_bodies():
+    w = jnp.zeros((128, 128), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((32, 128), jnp.float32)).compile()
+    r = hlo_analysis.analyze(c.as_text(), 1)
+    expect = 2 * 32 * 128 * 128 * 7
+    assert abs(r["flops"] - expect) / expect < 0.01
+    # XLA's own analysis counts the body once — documents why we re-derive
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    assert ca["flops"] < expect / 2
+
+
+def test_hlo_analyzer_matches_cost_analysis_loop_free():
+    a = jnp.zeros((64, 256), jnp.float32)
+    w1 = jnp.zeros((256, 512), jnp.float32)
+    w2 = jnp.zeros((512, 64), jnp.float32)
+    f = jax.jit(lambda x: jax.nn.relu(x @ w1) @ w2)
+    c = f.lower(jax.ShapeDtypeStruct(a.shape, a.dtype)).compile()
+    r = hlo_analysis.analyze(c.as_text(), 1)
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    assert abs(r["flops"] - ca["flops"]) / ca["flops"] < 0.05
+
+
+def test_collective_ring_factors():
+    txt = """
+ENTRY %main.1 (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%p0), replica_groups=[4,8]<=[32], to_apply=%add
+}
+"""
+    r = hlo_analysis.analyze(txt, 32)
+    # ring all-reduce: 2 * 4096 bytes * 7/8
+    assert abs(r["coll_eff_bytes"] - 2 * 4096 * 7 / 8) < 1e-6

@@ -1,0 +1,107 @@
+"""TCP transport, wire schema, and continuous-batching scheduler tests."""
+import time
+
+import jax
+import pytest
+
+from repro.configs import base
+from repro.models.lm import build_model
+from repro.net import messages
+from repro.net.tcp import TcpNet
+from repro.serving.engine import RealEngine, Request
+from repro.serving.scheduler import Scheduler
+
+
+# ---------------------------------------------------------------- messages
+def test_schema_validation():
+    assert messages.validate({"type": "hr_sync", "from": "m0", "paths": [],
+                              "active": 0, "hw": 5})
+    assert not messages.validate({"type": "hr_sync", "from": "m0"})
+    assert not messages.validate({"type": "bogus"})
+
+
+def test_framing_roundtrip_incremental():
+    msgs = [{"type": "proxy_ack", "path_id": "ab", "n": i}
+            for i in range(5)]
+    stream = b"".join(messages.encode(m) for m in msgs)
+    dec = messages.Decoder()
+    got = []
+    # feed in awkward chunk sizes
+    for i in range(0, len(stream), 7):
+        got.extend(dec.feed(stream[i:i + 7]))
+    assert got == msgs
+
+
+# ---------------------------------------------------------------- tcp
+class Echo:
+    def __init__(self):
+        self.got = []
+
+    def on_message(self, net, src, msg):
+        self.got.append((src, msg.get("n")))
+        if msg.get("reply_to"):
+            net.send("echo", msg["reply_to"], {"type": "proxy_ack",
+                                               "path_id": "00",
+                                               "n": msg["n"] + 100})
+
+
+def test_tcp_roundtrip():
+    net = TcpNet()
+    a, b = Echo(), Echo()
+    net.add_node("a", a)
+    net.add_node("echo", b)
+    for i in range(3):
+        net.send("a", "echo", {"type": "proxy_ack", "path_id": "00",
+                               "n": i, "reply_to": "a"}, 64)
+    deadline = time.time() + 5
+    while time.time() < deadline and len(a.got) < 3:
+        time.sleep(0.02)
+    net.close()
+    assert sorted(n for _, n in b.got) == [0, 1, 2]
+    assert sorted(n for _, n in a.got) == [100, 101, 102]
+
+
+def test_tcp_send_to_dead_node_drops():
+    net = TcpNet()
+    net.add_node("a", Echo())
+    net.send("a", "ghost", {"type": "proxy_ack", "path_id": "00"})
+    assert net.dropped == 1
+    net.close()
+
+
+# ---------------------------------------------------------------- scheduler
+@pytest.fixture(scope="module")
+def engine():
+    cfg = base.get_config("gentorrent-llama3-8b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return RealEngine(cfg, model, params, max_len=160)
+
+
+def test_scheduler_completes_all(engine):
+    s = Scheduler(engine, max_active=3)
+    for i in range(6):
+        s.submit(Request(i, [7] * 20 + [i], max_new=6))
+    done = s.run()
+    assert len(done) == 6
+    assert all(len(r.output) == 6 for r in done)
+    assert s.metrics["completed"] == 6
+
+
+def test_scheduler_matches_sequential_engine(engine):
+    prompt = list(range(30))
+    r_seq = engine.generate(Request(100, prompt, max_new=6))
+    s = Scheduler(engine, max_active=2)
+    s.submit(Request(101, prompt, max_new=6))
+    done = s.run()
+    assert done[0].output == r_seq.output
+
+
+def test_scheduler_prefix_cache_reuse(engine):
+    shared = [3] * 40
+    s = Scheduler(engine, max_active=2)
+    s.submit(Request(200, shared + [1], max_new=4))
+    s.run()
+    s.submit(Request(201, shared + [2], max_new=4))
+    done = s.run()
+    assert done[-1].cached_tokens >= 32

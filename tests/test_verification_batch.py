@@ -1,0 +1,37 @@
+"""Batched credibility must equal the per-pair scoring exactly."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.core.verification import (VerifierModel, credibility,
+                                     credibility_batch)
+from repro.models.lm import build_model
+
+
+@pytest.fixture(scope="module")
+def verifier():
+    cfg = base.get_config("gentorrent-llama3-8b").reduced()
+    cfg = dataclasses.replace(cfg, vocab=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return VerifierModel(cfg, model, params)
+
+
+def test_batch_matches_single(verifier):
+    rng = np.random.default_rng(0)
+    pairs = []
+    for i in range(4):
+        p = rng.integers(0, 128, size=8 + i).tolist()
+        r = rng.integers(0, 128, size=5 + 2 * i).tolist()
+        pairs.append((p, r))
+    singles = [credibility(verifier, p, r) for p, r in pairs]
+    batched = credibility_batch(verifier, pairs)
+    np.testing.assert_allclose(batched, singles, rtol=2e-3, atol=1e-4)
+
+
+def test_batch_empty(verifier):
+    assert credibility_batch(verifier, []) == []
+    assert credibility_batch(verifier, [([1, 2], [])]) == [0.0]
