@@ -170,9 +170,12 @@ def full_attention(cfg, q, k, v, q_positions, kv_positions,
 # --------------------------------------------------------------------------
 
 def decode_attention(cfg, q, k_cache, v_cache, kv_positions, pos,
-                     window: Optional[int] = None):
+                     window: Optional[int] = None, active=None):
     """One-token decode.  q: (B, 1, nq, h); caches: (B, S, nkv, h);
-    kv_positions: (B, S) absolute positions (-1 = empty); pos: (B,)."""
+    kv_positions: (B, S) absolute positions (-1 = empty); pos: (B,);
+    active: optional (B,) bool — dead batch slots in a slot-pool decode get
+    a fully-masked score row (uniform probs over finite NEG_INF, output
+    discarded by the caller) instead of forcing a recompile per occupancy."""
     B, _, nq, h = q.shape
     scale, cap = _scale(cfg), cfg.attn_softcap
     kc = constraints.pin(_expand_kv(k_cache, nq),
@@ -184,6 +187,8 @@ def decode_attention(cfg, q, k_cache, v_cache, kv_positions, pos,
     valid = (kv_positions >= 0) & (kv_positions <= pos[:, None])
     if window is not None:
         valid &= (pos[:, None] - kv_positions) < window
+    if active is not None:
+        valid &= active[:, None]
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     probs = jax.nn.softmax(s, axis=-1).astype(vc.dtype)
     return _gqa_out(probs, vc)                        # (B, 1, H, h)

@@ -177,8 +177,10 @@ def _ring_kv_positions(pos, size, window):
     return p  # (B, size); decode_attention masks p<0 and window
 
 
-def layer_decode(cfg, spec, p, x, pos, cache, memory_unused=None):
-    """x: (B, 1, d); pos: (B,) absolute position of the new token."""
+def layer_decode(cfg, spec, p, x, pos, cache, memory_unused=None,
+                 active=None):
+    """x: (B, 1, d); pos: (B,) absolute position of the new token;
+    active: optional (B,) bool slot-pool mask (see decode_attention)."""
     B = x.shape[0]
     h = common.apply_norm(cfg, p["norm1"], x)
     if spec.mixer == "attn":
@@ -193,7 +195,7 @@ def layer_decode(cfg, spec, p, x, pos, cache, memory_unused=None):
         else:
             kv_pos = jnp.broadcast_to(jnp.arange(size)[None], (B, size))
         o = attention.decode_attention(cfg, q, kc, vc, kv_pos, pos,
-                                       window=spec.window)
+                                       window=spec.window, active=active)
         h = attention.out_proj(cfg, p["mixer"], o)
         cache = {"k": kc, "v": vc}
     elif spec.mixer == "cross_attn":
@@ -205,7 +207,7 @@ def layer_decode(cfg, spec, p, x, pos, cache, memory_unused=None):
         T = cache["k"].shape[1]
         kv_pos = jnp.zeros((B, T), jnp.int32)  # all valid (<= pos)
         o = attention.decode_attention(cfg, q, cache["k"], cache["v"],
-                                       kv_pos, pos)
+                                       kv_pos, pos, active=active)
         h = attention.out_proj(cfg, p["mixer"], o)
     elif spec.mixer == "mamba":
         h, cache = mamba.mamba_decode(cfg, p["mixer"], h, cache)
@@ -237,6 +239,30 @@ def layer_cache_zeros(cfg, spec, B, max_len, T_mem):
     if spec.mixer == "slstm":
         return xlstm.empty_slstm_state(cfg, B)
     raise ValueError(spec.mixer)
+
+
+# ==========================================================================
+# Slot-pool cache helpers (continuous batching)
+# ==========================================================================
+#
+# A slot pool is an ordinary decode cache built with ``cache_zeros(B=max_
+# active, ...)``: leaves are (R, max_active, ...) with the batch on axis 1.
+# A scheduler scatters each admitted request's single-request cache (batch
+# dim 1, as produced by ``prefill``) into a free batch row, decodes the
+# whole pool with ONE ``decode(..., active=mask)`` dispatch per round, and
+# gathers the row back out on completion for prefix-cache insertion.  Both
+# helpers accept a traced ``slot`` so a jitted wrapper compiles once.
+
+def cache_slot_write(pool, single, slot):
+    """Scatter a batch-1 cache pytree into batch row ``slot`` of ``pool``."""
+    return jax.tree.map(lambda b, s: b.at[:, slot].set(s[:, 0]),
+                        pool, single)
+
+
+def cache_slot_read(pool, slot):
+    """Gather batch row ``slot`` of ``pool`` as a batch-1 cache pytree."""
+    return jax.tree.map(
+        lambda b: jax.lax.dynamic_slice_in_dim(b, slot, 1, axis=1), pool)
 
 
 # ==========================================================================
@@ -403,8 +429,12 @@ class LM:
         return logits, cache
 
     # ---------------- decode ----------------
-    def decode(self, params, cache, tokens, pos):
-        """tokens: (B, 1); pos: (B,) absolute position of the new token."""
+    def decode(self, params, cache, tokens, pos, active=None):
+        """tokens: (B, 1); pos: (B,) absolute position of the new token.
+
+        ``active`` is an optional (B,) bool slot-pool mask: with a fixed
+        max-batch cache, a partially occupied pool decodes with dead rows
+        masked instead of recompiling for every occupancy level."""
         cfg = self.cfg
         x = self._embed(params, tokens, pos[:, None])
 
@@ -412,7 +442,8 @@ class LM:
             bp, cr = xs
             new = []
             for i, spec in enumerate(cfg.pattern):
-                x, c = layer_decode(cfg, spec, bp[i], x, pos, cr[i])
+                x, c = layer_decode(cfg, spec, bp[i], x, pos, cr[i],
+                                    active=active)
                 new.append(c)
             return constraints.constrain_batch(x), tuple(new)
 

@@ -9,6 +9,7 @@ hash paths + load to the group.
 """
 from __future__ import annotations
 
+import itertools
 import random
 from dataclasses import dataclass, field
 from typing import Optional
@@ -38,6 +39,13 @@ class ModelNode:
         self.engine = engine or LatencyEngine(
             LatencyEngineConfig(hw_score=hw_score))
         self.real_engine = real_engine      # optional RealEngine (tiny cfg)
+        # real-engine requests go through the slot-pool batched scheduler:
+        # submitted at admission (_serve), drained at completion (_finish),
+        # so requests overlapping on the sim clock share decode dispatches
+        self._real_sched = None
+        self._real_rid = itertools.count(1)
+        self._rid_by_msg: dict = {}
+        self._real_results: dict = {}
         self.fwd_cfg = fwd_cfg
         self.sync_every = sync_every
         self.use_crypto = use_crypto
@@ -183,18 +191,43 @@ class ModelNode:
         self._recent_prompts.append(list(tokens))
         if len(self._recent_prompts) > 512:
             self._recent_prompts = self._recent_prompts[-256:]
+        if self.real_engine is not None and self.respond_fn is None:
+            self._submit_real(payload, max_new)
         net.call_after(total, self._finish, net, payload, max_new)
+
+    # ---- real-engine path: slot-pool continuous batching ----
+    def _submit_real(self, payload: dict, n_out: int):
+        from repro.serving.engine import Request
+        from repro.serving.scheduler import Scheduler
+        if self._real_sched is None:
+            self._real_sched = Scheduler(self.real_engine, max_active=4)
+        rid = next(self._real_rid)
+        self._rid_by_msg[payload["msg_id"]] = rid
+        self._real_sched.submit(
+            Request(rid, payload["prompt"], max_new=min(n_out, 16)))
+
+    def _drain_real(self, rid: int) -> list:
+        sched = self._real_sched
+        while rid not in self._real_results and (sched.queue or sched.active):
+            sched.step()
+            for r in sched.done:
+                self._real_results[r.req_id] = r.output
+            sched.done.clear()
+        return self._real_results.pop(rid, [])
 
     def _finish(self, net, payload: dict, n_out: int):
         self.active_requests = max(0, self.active_requests - 1)
         self.peers[self.node_id].active_requests = self.active_requests
+        rid = self._rid_by_msg.pop(payload["msg_id"], None)
         if self.respond_fn is not None:
-            out = list(self.respond_fn(payload["prompt"]))
+            if rid is not None:    # respond_fn set mid-flight: retire the
+                self._drain_real(rid)   # already-submitted request so it
+            out = list(self.respond_fn(payload["prompt"]))  # can't linger
         elif self.real_engine is not None:
-            from repro.serving.engine import Request
-            r = self.real_engine.generate(
-                Request(0, payload["prompt"], max_new=min(n_out, 16)))
-            out = r.output
+            if rid is None:      # respond_fn was unset mid-flight; late entry
+                self._submit_real(payload, n_out)
+                rid = self._rid_by_msg.pop(payload["msg_id"])
+            out = self._drain_real(rid)
         else:
             out = [int(x) % 1000 for x in range(n_out)]
         resp = {"msg_id": payload["msg_id"],

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.lm import cache_slot_read, cache_slot_write
 from repro.serving.prefix_cache import PrefixCache
 
 
@@ -46,6 +47,16 @@ class Result:
     prompt_tokens: int = 0
 
 
+@dataclass
+class PrefillState:
+    """Slot-ready request state: a batch-1 cache pytree positioned at
+    ``pos`` with the logits of the last prompt token."""
+    cache: object
+    logits: object      # (1, padded_vocab)
+    pos: int
+    matched: int        # prefix-cache tokens reused
+
+
 class RealEngine:
     def __init__(self, cfg, model, params, cache_bytes: int = 1 << 30,
                  max_len: int = 1024):
@@ -60,6 +71,7 @@ class RealEngine:
         # families only reuse on exact full-prefix hits (disabled here).
         self.partial_reuse = all(s.mixer in ("attn", "cross_attn")
                                  for s in cfg.pattern)
+        self.batched_traces = 0   # compilations of the slot-pool decode
 
         def _prefill(params, tokens):
             return model.prefill(params, tokens, max_len=max_len,
@@ -68,30 +80,36 @@ class RealEngine:
         def _decode(params, cache, tok, pos):
             return model.decode(params, cache, tok, pos)
 
+        def _decode_batched(params, cache, tok, pos, active):
+            self.batched_traces += 1   # trace-time side effect only
+            return model.decode(params, cache, tok, pos, active=active)
+
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
+        self._decode_batched = jax.jit(_decode_batched)
+        self._slot_write = jax.jit(cache_slot_write)
+        self._slot_read = jax.jit(cache_slot_read)
 
     def _cache_nbytes(self, cache) -> int:
         return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
 
-    def generate(self, req: Request, now: float = 0.0) -> Result:
-        t0 = time.monotonic()
+    def prefill_request(self, req: Request) -> PrefillState:
+        """Prefix-cache match + prefill + teacher-forced suffix replay.
+
+        Shared by the sequential ``generate`` path and slot-pool admission
+        (serving/scheduler.py); returns a batch-1 slot-ready state."""
         toks = [int(t) for t in req.tokens]
         matched, entry = self.prefix_cache.match(toks)
         if entry is not None and matched >= 8 and self.partial_reuse:
-            cache = entry.handle
-            pos0 = matched
-            suffix = toks[matched:]
+            cache, pos, suffix = entry.handle, matched, toks[matched:]
         else:
             matched = 0
             boot = max(1, min(len(toks), 8))
-            logits, cache = self._prefill(
+            _, cache = self._prefill(
                 self.params, jnp.asarray([toks[:boot]], jnp.int32))
-            pos0 = boot
-            suffix = toks[boot:]
+            pos, suffix = boot, toks[boot:]
         # teacher-forced decode-append over the (uncached) suffix
         logits = None
-        pos = pos0
         for t in suffix:
             logits, cache = self._decode(
                 self.params, cache, jnp.asarray([[t]], jnp.int32),
@@ -101,6 +119,13 @@ class RealEngine:
             logits, cache = self._decode(
                 self.params, cache, jnp.asarray([[toks[-1]]], jnp.int32),
                 jnp.asarray([pos - 1], jnp.int32))
+        return PrefillState(cache, logits, pos, matched)
+
+    def generate(self, req: Request, now: float = 0.0) -> Result:
+        """One-slot sequential decode (thin wrapper over prefill_request)."""
+        t0 = time.monotonic()
+        st = self.prefill_request(req)
+        cache, logits, pos = st.cache, st.logits, st.pos
         ttft = time.monotonic() - t0
         out = []
         for _ in range(req.max_new):
@@ -112,11 +137,15 @@ class RealEngine:
                 self.params, cache, jnp.asarray([[nxt]], jnp.int32),
                 jnp.asarray([pos], jnp.int32))
             pos += 1
-        full = toks + out
+        # insert only the KV-covered prefix: after an eos/len break the last
+        # appended token was never decoded, so its position holds no KV —
+        # pos counts exactly the tokens whose state is in the cache
+        full = ([int(t) for t in req.tokens] + out)[:pos]
         self.prefix_cache.insert(full, cache, self._cache_nbytes(cache))
         return Result(req.req_id, out, ttft=ttft,
                       total=time.monotonic() - t0,
-                      cached_tokens=matched, prompt_tokens=len(toks))
+                      cached_tokens=st.matched,
+                      prompt_tokens=len(req.tokens))
 
 
 @dataclass

@@ -70,6 +70,18 @@ class PrefixCache:
         self.misses += 1
         return 0, None
 
+    def peek(self, tokens: Sequence[int]) -> tuple[int, Optional[Entry]]:
+        """Read-only ``match``: no hit/miss counters, no LRU touch.
+
+        For admission scans that probe many queued requests to *rank* them
+        — only the winner's actual reuse should show up in stats."""
+        chains = _chain_hashes(tokens, self.block)
+        for d in range(len(chains), 0, -1):
+            e = self._by_chain.get(chains[d - 1])
+            if e is not None:
+                return min(d * self.block, e.length), e
+        return 0, None
+
     # ---- insert ----
     def insert(self, tokens: Sequence[int], handle, nbytes: int):
         chains = _chain_hashes(tokens, self.block)
@@ -77,18 +89,30 @@ class PrefixCache:
             return
         length = (len(tokens) // self.block) * self.block
         entry = Entry(handle, length, nbytes, keys=list(chains))
+        self.used_bytes += nbytes
         for key in chains:
             old = self._by_chain.get(key)
-            if old is not None and old is not entry and key == old.keys[-1]:
-                self._drop(old)
+            if old is not None and old is not entry:
+                self._unlink(old, key)
             self._by_chain[key] = entry
-        self.used_bytes += nbytes
         self._evict()
+
+    def _unlink(self, e: Entry, key: bytes):
+        """Take one chain key away from ``e`` (the caller re-points it);
+        once an entry holds no keys it is unreachable — release its bytes
+        so accounting stays exact (used_bytes == sum of live entries)."""
+        try:
+            e.keys.remove(key)
+        except ValueError:
+            return
+        if not e.keys:
+            self.used_bytes -= e.nbytes
 
     def _drop(self, e: Entry):
         for k in e.keys:
             if self._by_chain.get(k) is e:
                 self._by_chain.pop(k)
+        e.keys.clear()
         self.used_bytes -= e.nbytes
 
     def _evict(self):

@@ -1,11 +1,16 @@
-"""Continuous-batching scheduler for the real engine.
+"""Slot-pool continuous-batching scheduler for the real engine.
 
-Admission queue -> active batch of up to ``max_active`` requests; each
-scheduler tick runs one decode round for every active request (the
-continuous-batching semantics of vLLM/SGLang, serialized on CPU), admits
-new requests as slots free, applies session stickiness and a
-longest-prefix-cache-match admission preference (the node-local analogue
-of the HR-tree's group-level cache affinity).
+The pool is a fixed ``(R, max_active, ...)``-batched decode cache
+(models/lm.py slot helpers).  Admission prefills a request on the batch-1
+path and *scatters* its cache into a free batch row; every ``step()`` then
+issues ONE jitted ``decode(params, cache, tokens(B,1), pos(B,),
+active(B,))`` dispatch for the whole pool — dead rows are masked, not
+recompiled — and token selection / EOS handling is vectorized over the
+batch.  Completion *gathers* the row back out for ``PrefixCache.insert``.
+Admission keeps session stickiness semantics and a longest-prefix-match
+preference (the node-local analogue of the HR-tree's group-level cache
+affinity), probed read-only via ``PrefixCache.peek`` so the scan does not
+skew hit-rate stats or LRU order.
 """
 from __future__ import annotations
 
@@ -15,15 +20,14 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.serving.engine import RealEngine, Request, Result
 
 
 @dataclass
-class _Active:
+class _Slot:
     req: Request
-    cache: object
-    logits: object
     pos: int
     out: list = field(default_factory=list)
     t_start: float = 0.0
@@ -38,9 +42,19 @@ class Scheduler:
         self.max_active = max_active
         self.prefer_cache_hits = prefer_cache_hits
         self.queue: collections.deque = collections.deque()
-        self.active: list[_Active] = []
+        self.slots: list[Optional[_Slot]] = [None] * max_active
         self.done: list[Result] = []
-        self.metrics = {"admitted": 0, "completed": 0, "queue_peak": 0}
+        self.metrics = {"admitted": 0, "completed": 0, "queue_peak": 0,
+                        "decode_calls": 0, "rounds": 0}
+        # the slot pool: one batched cache pytree + one batched logits row
+        # per slot, allocated once for the engine's max_len
+        self._cache = engine.model.cache_zeros(max_active, engine.max_len)
+        self._logits = jnp.zeros((max_active, engine.cfg.padded_vocab),
+                                 jnp.float32)
+
+    @property
+    def active(self) -> list:
+        return [s for s in self.slots if s is not None]
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -48,77 +62,93 @@ class Scheduler:
                                          len(self.queue))
 
     # ------------------------------------------------------------------
-    def _admit_one(self):
-        if not self.queue or len(self.active) >= self.max_active:
-            return
+    def _pick_request(self) -> Request:
         ix = 0
         if self.prefer_cache_hits and len(self.queue) > 1:
             best, best_len = 0, -1
             for i, r in enumerate(self.queue):
-                ln, _ = self.engine.prefix_cache.match(
+                ln, _ = self.engine.prefix_cache.peek(
                     [int(t) for t in r.tokens])
                 if ln > best_len:
                     best, best_len = i, ln
             ix = best
         req = self.queue[ix]
         del self.queue[ix]
+        return req
+
+    def _admit_one(self):
+        free = next((i for i, s in enumerate(self.slots) if s is None), None)
+        if free is None or not self.queue:
+            return
+        req = self._pick_request()
         t0 = time.monotonic()
         eng = self.engine
-        toks = [int(t) for t in req.tokens]
-        matched, entry = eng.prefix_cache.match(toks)
-        if entry is not None and matched >= 8 and eng.partial_reuse:
-            cache, pos, suffix = entry.handle, matched, toks[matched:]
-        else:
-            matched = 0
-            boot = max(1, min(len(toks), 8))
-            _, cache = eng._prefill(eng.params,
-                                    jnp.asarray([toks[:boot]], jnp.int32))
-            pos, suffix = boot, toks[boot:]
-        logits = None
-        for t in suffix:
-            logits, cache = eng._decode(eng.params, cache,
-                                        jnp.asarray([[t]], jnp.int32),
-                                        jnp.asarray([pos], jnp.int32))
-            pos += 1
-        if logits is None:
-            logits, cache = eng._decode(eng.params, cache,
-                                        jnp.asarray([[toks[-1]]], jnp.int32),
-                                        jnp.asarray([pos - 1], jnp.int32))
-        self.active.append(_Active(req, cache, logits, pos,
-                                   t_start=t0,
-                                   ttft=time.monotonic() - t0,
-                                   cached_tokens=matched))
+        st = eng.prefill_request(req)
+        self._cache = eng._slot_write(self._cache, st.cache, free)
+        self._logits = self._logits.at[free].set(st.logits[0])
+        self.slots[free] = _Slot(req, st.pos, t_start=t0,
+                                 ttft=time.monotonic() - t0,
+                                 cached_tokens=st.matched)
         self.metrics["admitted"] += 1
 
+    # ------------------------------------------------------------------
     def step(self):
-        """One continuous-batching round: admit + one decode per active."""
-        while len(self.active) < self.max_active and self.queue:
+        """One continuous-batching round: admit into free slots, then ONE
+        batched decode dispatch for every still-active slot."""
+        while self.queue and any(s is None for s in self.slots):
             self._admit_one()
-        finished = []
-        for a in self.active:
-            nxt = int(jnp.argmax(a.logits[0]))
-            a.out.append(nxt)
-            hit_eos = (nxt == a.req.eos_id
-                       or len(a.out) >= a.req.max_new
-                       or a.pos >= self.engine.max_len - 1)
-            if hit_eos:
-                finished.append(a)
-                continue
-            a.logits, a.cache = self.engine._decode(
-                self.engine.params, a.cache,
-                jnp.asarray([[nxt]], jnp.int32),
-                jnp.asarray([a.pos], jnp.int32))
-            a.pos += 1
-        for a in finished:
-            self.active.remove(a)
-            full = [int(t) for t in a.req.tokens] + a.out
-            self.engine.prefix_cache.insert(
-                full, a.cache, self.engine._cache_nbytes(a.cache))
-            self.done.append(Result(a.req.req_id, a.out, ttft=a.ttft,
-                                    total=time.monotonic() - a.t_start,
-                                    cached_tokens=a.cached_tokens,
-                                    prompt_tokens=len(a.req.tokens)))
-            self.metrics["completed"] += 1
+        active_ix = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active_ix:
+            return
+        self.metrics["rounds"] += 1
+        nxt = np.asarray(jnp.argmax(self._logits, axis=-1))
+        finished, cont = [], []
+        for i in active_ix:
+            s = self.slots[i]
+            tok = int(nxt[i])
+            if len(s.out) < s.req.max_new:     # max_new=0 emits nothing,
+                s.out.append(tok)              # matching generate()
+            if (tok == s.req.eos_id or len(s.out) >= s.req.max_new
+                    or s.pos >= self.engine.max_len - 1):
+                finished.append(i)
+            else:
+                cont.append(i)
+        # gather completed rows BEFORE the pool decode: the batched dispatch
+        # writes every row (dead rows included, masked only in attention
+        # scores), so a finished slot's KV must be snapshot first
+        for i in finished:
+            self._finish_slot(i)
+        if cont:
+            B = self.max_active
+            tok = np.zeros((B, 1), np.int32)
+            pos = np.zeros((B,), np.int32)
+            act = np.zeros((B,), bool)
+            for i in cont:
+                tok[i, 0] = nxt[i]
+                pos[i] = self.slots[i].pos
+                act[i] = True
+            self._logits, self._cache = self.engine._decode_batched(
+                self.engine.params, self._cache,
+                jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(act))
+            self.metrics["decode_calls"] += 1
+            for i in cont:
+                self.slots[i].pos += 1
+
+    def _finish_slot(self, i: int):
+        s = self.slots[i]
+        self.slots[i] = None
+        eng = self.engine
+        kv = eng._slot_read(self._cache, i)
+        # s.pos counts exactly the tokens whose KV is in the slot row (the
+        # finishing token was appended but never pool-decoded) — inserting
+        # more would register block keys over positions that hold zeros
+        full = ([int(t) for t in s.req.tokens] + s.out)[:s.pos]
+        eng.prefix_cache.insert(full, kv, eng._cache_nbytes(kv))
+        self.done.append(Result(s.req.req_id, s.out, ttft=s.ttft,
+                                total=time.monotonic() - s.t_start,
+                                cached_tokens=s.cached_tokens,
+                                prompt_tokens=len(s.req.tokens)))
+        self.metrics["completed"] += 1
 
     def run(self, max_rounds: int = 10_000):
         rounds = 0

@@ -1,0 +1,258 @@
+"""Slot-pool continuous batching: parity with the sequential engine,
+single-dispatch/single-trace guarantees, and exact prefix-cache accounting.
+
+Deliberately hypothesis-free so it runs even without dev extras installed.
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.models.lm import build_model, cache_slot_read, cache_slot_write
+from repro.serving.engine import RealEngine, Request
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def gt():
+    cfg = base.get_config("gentorrent-llama3-8b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n, lengths=(20, 40, 36, 20, 44)):
+    return [[(37 * i + j) % cfg.vocab for j in range(lengths[i % len(lengths)])]
+            for i in range(n)]
+
+
+# ------------------------------------------------------------- slot helpers
+def test_cache_slot_write_read_roundtrip(gt):
+    cfg, model, _ = gt
+    pool = model.cache_zeros(3, 32)
+    single = jax.tree.map(
+        lambda a: jnp.full(a.shape[:1] + (1,) + a.shape[2:], 2.0, a.dtype),
+        model.cache_zeros(1, 32))
+    pool2 = cache_slot_write(pool, single, 1)
+    got = cache_slot_read(pool2, 1)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(single)):
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # other rows untouched
+    for a, b in zip(jax.tree.leaves(cache_slot_read(pool2, 0)),
+                    jax.tree.leaves(cache_slot_read(pool, 0))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------------ parity
+def test_batched_matches_sequential_attn(gt):
+    cfg, model, params = gt
+    prompts = _prompts(cfg, 6)
+    eng_seq = RealEngine(cfg, model, params, max_len=128)
+    ref = {i: eng_seq.generate(Request(i, p, max_new=8)).output
+           for i, p in enumerate(prompts)}
+    eng_b = RealEngine(cfg, model, params, max_len=128)
+    s = Scheduler(eng_b, max_active=4)
+    for i, p in enumerate(prompts):
+        s.submit(Request(i, p, max_new=8))
+    out = {r.req_id: r.output for r in s.run()}
+    assert out == ref
+    # occupancy varied over the run (6 reqs through 4 slots), yet the
+    # batched decode compiled exactly once — dead slots are masked
+    assert eng_b.batched_traces == 1
+
+
+@pytest.mark.parametrize("arch", ["xlstm-1.3b", "jamba-v0.1-52b"])
+def test_batched_matches_sequential_recurrent(arch):
+    cfg = base.get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [[(11 * i + j) % cfg.vocab for j in range(12)] for i in range(3)]
+    eng_seq = RealEngine(cfg, model, params, max_len=64)
+    ref = {i: eng_seq.generate(Request(i, p, max_new=5)).output
+           for i, p in enumerate(prompts)}
+    eng_b = RealEngine(cfg, model, params, max_len=64)
+    s = Scheduler(eng_b, max_active=2)
+    for i, p in enumerate(prompts):
+        s.submit(Request(i, p, max_new=5))
+    out = {r.req_id: r.output for r in s.run()}
+    assert out == ref
+    assert eng_b.batched_traces == 1
+
+
+def test_midstream_admission_into_partial_batch(gt):
+    cfg, model, params = gt
+    prompts = _prompts(cfg, 4)
+    eng_seq = RealEngine(cfg, model, params, max_len=128)
+    ref = {i: eng_seq.generate(Request(i, p, max_new=10)).output
+           for i, p in enumerate(prompts)}
+    eng_b = RealEngine(cfg, model, params, max_len=128)
+    s = Scheduler(eng_b, max_active=3)
+    s.submit(Request(0, prompts[0], max_new=10))
+    s.submit(Request(1, prompts[1], max_new=10))
+    for _ in range(3):
+        s.step()           # two slots mid-decode, one free
+    assert len(s.active) == 2
+    s.submit(Request(2, prompts[2], max_new=10))
+    s.submit(Request(3, prompts[3], max_new=10))
+    out = {r.req_id: r.output for r in s.run()}
+    assert out == ref
+    assert eng_b.batched_traces == 1
+
+
+# ---------------------------------------------------------- dispatch count
+def test_step_issues_exactly_one_decode_dispatch(gt):
+    cfg, model, params = gt
+    eng = RealEngine(cfg, model, params, max_len=128)
+    s = Scheduler(eng, max_active=3)
+    for i in range(3):
+        s.submit(Request(i, [7] * 12 + [i], max_new=6, eos_id=-1))
+    s.step()               # admissions + first batched round
+    assert len(s.active) == 3
+
+    batched_calls = []
+    real_batched = eng._decode_batched
+    eng._decode_batched = lambda *a: (batched_calls.append(1)
+                                      or real_batched(*a))
+
+    def _no_single(*a):    # pragma: no cover - failure path
+        raise AssertionError("per-request decode dispatched from step()")
+    eng._decode = _no_single
+
+    while s.active:
+        n0 = len(batched_calls)
+        s.step()
+        made = len(batched_calls) - n0
+        # exactly one pool dispatch whenever any slot survives the round,
+        # zero when the round retires every remaining slot
+        assert made == (1 if s.active else 0)
+    assert s.metrics["completed"] == 3
+    assert eng.batched_traces == 1
+
+
+def test_scheduler_admission_scan_uses_peek(gt):
+    """Ranking queued requests must not skew cache stats or LRU order."""
+    cfg, model, params = gt
+    eng = RealEngine(cfg, model, params, max_len=128)
+    warm = [3] * 40
+    eng.generate(Request(0, warm + [1], max_new=4))
+    h0, m0 = eng.prefix_cache.hits, eng.prefix_cache.misses
+    s = Scheduler(eng, max_active=1)
+    for i in range(4):
+        s.submit(Request(10 + i, warm + [10 + i], max_new=2))
+    s.run()
+    # one real match per admission (4 total); the 4x4-ish ranking probes of
+    # the queue must not have touched the counters
+    assert (eng.prefix_cache.hits - h0) + (eng.prefix_cache.misses - m0) == 4
+
+
+def test_finished_slot_cache_covers_only_decoded_tokens(gt):
+    """A finished request's last token is appended but never decoded, so
+    the inserted prefix-cache entry must not claim coverage of its
+    position — a later request reusing that block would attend zero KV."""
+    cfg, model, params = gt
+    prompt = [11] * 16
+    first = RealEngine(cfg, model, params, max_len=128).generate(
+        Request(0, prompt, max_new=48)).output     # full stream: 64 = 2 blocks
+    follow = prompt + first
+    ref = RealEngine(cfg, model, params, max_len=128).generate(
+        Request(1, follow, max_new=4)).output      # cache-free reference
+
+    eng = RealEngine(cfg, model, params, max_len=128)
+    s = Scheduler(eng, max_active=2)
+    s.submit(Request(0, prompt, max_new=48))
+    assert s.run()[0].output == first
+    s.submit(Request(1, follow, max_new=4))
+    out = {r.req_id: r.output for r in s.run()}[1]
+    assert out == ref
+
+
+def test_max_new_zero_matches_sequential(gt):
+    cfg, model, params = gt
+    eng = RealEngine(cfg, model, params, max_len=128)
+    assert eng.generate(Request(0, [6] * 12, max_new=0)).output == []
+    s = Scheduler(eng, max_active=2)
+    s.submit(Request(1, [5] * 12, max_new=0))
+    done = s.run()
+    assert done and done[0].output == []
+
+
+# ------------------------------------------------------------ overlay e2e
+def test_overlay_real_engine_uses_batched_scheduler(gt):
+    """ModelNode's real_engine path must serve through the slot pool."""
+    from repro.overlay.network import OverlayConfig, build_overlay
+    cfg, model, params = gt
+    prompt = [5] * 20
+    ref = RealEngine(cfg, model, params, max_len=128).generate(
+        Request(0, prompt, max_new=4)).output
+    ov = build_overlay(OverlayConfig(n_users=8, n_models=2,
+                                     use_crypto=False, seed=5))
+    eng = RealEngine(cfg, model, params, max_len=128)
+    for m in ov.models:
+        m.real_engine = eng
+    got = []
+    u = ov.users[0]
+    u.on_response = lambda _n, p: got.append(p)
+    u.send_prompt(ov.net, prompt, extra_meta={"max_new": 4})
+    ov.net.run_until(ov.net.t + 60)
+    assert got and got[0]["output"] == ref
+    served = [m for m in ov.models if m._real_sched is not None]
+    assert served
+    assert sum(m._real_sched.metrics["decode_calls"] for m in served) > 0
+    assert sum(m._real_sched.metrics["completed"] for m in served) == 1
+
+
+# ------------------------------------------------------ prefix-cache bytes
+def _live_bytes(pc: PrefixCache) -> int:
+    return sum(e.nbytes for e in
+               {id(e): e for e in pc._by_chain.values()}.values())
+
+
+def test_used_bytes_released_when_entry_loses_all_keys():
+    pc = PrefixCache(block=8)
+    toks = list(range(32))
+    pc.insert(toks, "A", 100)
+    pc.insert(toks + list(range(32, 48)), "B", 150)   # re-keys all of A
+    assert pc.used_bytes == _live_bytes(pc) == 150
+    pc.insert(toks[:8] + [99] * 8, "C", 50)           # B keeps deeper keys
+    assert pc.used_bytes == _live_bytes(pc) == 200
+
+
+def test_used_bytes_exact_under_random_churn():
+    random.seed(7)
+    pc = PrefixCache(max_bytes=20_000, block=8)
+    streams = []
+    for _ in range(600):
+        if streams and random.random() < 0.6:
+            seed = random.choice(streams)
+            cut = random.randrange(0, len(seed) + 1, 8)
+            toks = seed[:cut] + [random.randrange(50)
+                                 for _ in range(random.randrange(0, 40))]
+        else:
+            toks = [random.randrange(50)
+                    for _ in range(random.randrange(8, 80))]
+        streams.append(toks)
+        streams = streams[-40:]
+        pc.insert(toks, None, random.randrange(1, 500))
+        assert pc.used_bytes == _live_bytes(pc)
+        assert pc.used_bytes <= pc.max_bytes
+
+
+def test_peek_is_read_only():
+    pc = PrefixCache(block=8)
+    toks = list(range(32))
+    pc.insert(toks, "A", 10)
+    e = pc._by_chain[list(pc._by_chain)[0]]
+    before = (pc.hits, pc.misses, pc.hit_tokens, e.hits, e.last_used)
+    ln, got = pc.peek(toks)
+    assert ln == 32 and got is not None
+    ln2, got2 = pc.peek([999] * 32)
+    assert ln2 == 0 and got2 is None
+    assert (pc.hits, pc.misses, pc.hit_tokens, e.hits, e.last_used) == before
+    # match() still counts
+    pc.match(toks)
+    assert pc.hits == 1
