@@ -1,9 +1,11 @@
 """Fig 18: normalized LLM throughput per workload (GenTorrent ToolUse = 1),
-GenTorrent vs no-HR-tree — plus a real-engine continuous-batching
-comparison: slot-pool batched decode (one dispatch per round) vs the
-sequential per-request path, tokens/s on the reduced config."""
+GenTorrent vs no-HR-tree — plus real-engine comparisons on the reduced
+config: slot-pool batched decode vs the sequential per-request path
+(tokens/s), and paged-vs-dense KV (live KV bytes at equal occupancy and
+prefix-hit admission latency for a shared-prompt workload)."""
 from __future__ import annotations
 
+import sys
 import time
 
 from benchmarks.common import SCALE, emit, save
@@ -64,6 +66,64 @@ def bench_continuous_batching(max_active: int = 4, n_req: int = 8,
             "batched_traces": eng_b.batched_traces}
 
 
+def bench_paged_kv(max_active: int = 4, shared_len: int = 96,
+                   tail_len: int = 8, max_new: int = 16):
+    """Paged vs dense KV at equal occupancy, shared-prompt workload.
+
+    All requests share a ``shared_len``-token prompt prefix.  Reported per
+    mode: (a) live KV bytes once ``max_active`` requests are admitted —
+    the dense pool pins ``max_active x max_len`` strips plus a full cache
+    *copy* per prefix-cache entry, while the paged pool holds one physical
+    copy of the shared pages (aliased by every slot) plus per-request tail
+    pages; (b) prefix-hit admission latency — dense replays the suffix
+    token-by-token over a max_len cache, paged aliases the cached pages
+    (refcount bump) and chunk-prefills only the divergence suffix."""
+    import jax
+
+    from repro.configs import base
+    from repro.models.lm import build_model
+    from repro.serving.engine import RealEngine, Request
+    from repro.serving.scheduler import Scheduler
+
+    cfg = base.get_config("gentorrent-llama3-8b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shared = [(11 + j) % cfg.vocab for j in range(shared_len)]
+
+    out = {"max_active": max_active, "shared_len": shared_len,
+           "tail_len": tail_len}
+    for mode, paged in (("dense", False), ("paged", True)):
+        eng = RealEngine(cfg, model, params, max_len=256, paged=paged)
+        # warm: compile + seed the prefix cache with the shared prompt
+        eng.generate(Request(0, shared + [1] * tail_len, max_new=2))
+        # admission latency on a prefix hit (compile already warm)
+        t0 = time.perf_counter()
+        st = eng.prefill_request(Request(1, shared + [2] * tail_len))
+        admit_s = time.perf_counter() - t0
+        if paged:
+            eng.release_pages(st.pages)
+        # equal occupancy: admit max_active hit requests, one step
+        sched = Scheduler(eng, max_active=max_active)
+        for i in range(max_active):
+            sched.submit(Request(10 + i, shared + [3 + i] * tail_len,
+                                 max_new=max_new))
+        sched.step()
+        out[mode] = {
+            "kv_pool_bytes": sched.kv_bytes_in_use(),
+            "prefix_cache_bytes": eng.prefix_cache.used_bytes,
+            "admission_ms_on_hit": admit_s * 1e3,
+        }
+        sched.run()
+    dense_total = (out["dense"]["kv_pool_bytes"]
+                   + out["dense"]["prefix_cache_bytes"])
+    paged_total = out["paged"]["kv_pool_bytes"]   # live pages include the
+    out["bytes_ratio_paged_over_dense"] = paged_total / dense_total  # cache
+    out["admission_speedup"] = (out["dense"]["admission_ms_on_hit"]
+                                / out["paged"]["admission_ms_on_hit"])
+    out["paged_strictly_lower"] = paged_total < dense_total
+    return out
+
+
 def main():
     n_req = max(400, int(900 * SCALE))
     raw = {}
@@ -86,12 +146,28 @@ def main():
             for wl, d in raw.items()}
     us = (time.perf_counter() - t0) * 1e6 / (len(raw) * 2)
     cb = bench_continuous_batching()
+    pk = bench_paged_kv()
     save("fig18_throughput", {"normalized": rows, "raw_tok_s": raw,
-                              "continuous_batching": cb})
+                              "continuous_batching": cb,
+                              "paged_kv": pk})
     emit("fig18_normalized_throughput", us, rows)
     emit("continuous_batching_tok_s", cb["us_per_decode_round"], cb)
+    emit("paged_kv_admission_us",
+         pk["paged"]["admission_ms_on_hit"] * 1e3, pk)
     return rows
 
 
+def quick():
+    """Engine-only benches at reduced sizes (CI artifact: keeps the perf
+    trajectory visible per PR without the overlay-scale sim)."""
+    cb = bench_continuous_batching(n_req=4, max_new=16)
+    pk = bench_paged_kv(max_active=4, shared_len=64, max_new=8)
+    save("fig18_throughput_quick", {"continuous_batching": cb,
+                                    "paged_kv": pk})
+    emit("continuous_batching_tok_s", cb["us_per_decode_round"], cb)
+    emit("paged_kv_admission_us",
+         pk["paged"]["admission_ms_on_hit"] * 1e3, pk)
+
+
 if __name__ == "__main__":
-    main()
+    quick() if "quick" in sys.argv[1:] else main()

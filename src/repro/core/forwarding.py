@@ -19,6 +19,10 @@ class PeerInfo:
     active_requests: int = 0
     latency_ms: float = 0.0
     kv_usage: float = 0.0
+    # fraction of the peer's paged-KV arena in use (0..1); 0 when the peer
+    # has no paged real engine.  Broadcast by model nodes so forwarding can
+    # see memory pressure, not just slot occupancy.
+    kv_pressure: float = 0.0
 
     @property
     def relative_load(self) -> float:

@@ -22,3 +22,26 @@ def decode_attention(q, k, v, lengths, *, window=None, softcap=None,
                                    softcap=softcap, scale=scale,
                                    n_splits=n_splits,
                                    interpret=impl == "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "impl"))
+def paged_decode_attention(q, k_arena, v_arena, page_table, lengths, *,
+                           window=None, softcap=None, scale=None,
+                           impl="auto"):
+    """Paged split-K decode: q (B, H, D); arenas (P, BLOCK, Hkv, D);
+    page_table (B, n_pg); lengths (B,).  The pallas path gathers pages
+    inside the kernel via a scalar-prefetched page table."""
+    from repro.kernels.decode_attention.paged import \
+        paged_decode_attention_pallas
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return paged_decode_attention_ref(q, k_arena, v_arena, page_table,
+                                          lengths, window=window,
+                                          softcap=softcap, scale=scale)
+    return paged_decode_attention_pallas(q, k_arena, v_arena, page_table,
+                                         lengths, window=window,
+                                         softcap=softcap, scale=scale,
+                                         interpret=impl == "interpret")

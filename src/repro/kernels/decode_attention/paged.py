@@ -1,0 +1,111 @@
+"""Paged decode attention: split-K flash-decoding over physical KV pages.
+
+The dense split-K kernel (kernel.py) keeps the page indirection at the XLA
+level; THIS variant moves it inside the kernel the way vLLM's
+PagedAttention does, TPU-style: the per-request page table rides in as a
+**scalar-prefetch** operand (pltpu.PrefetchScalarGridSpec), so the BlockSpec
+index map can pick each grid step's KV tile straight out of the arena —
+grid = (B*H, n_pages); program (bh, j) DMAs physical page
+``page_table[b, j]`` and reduces it to a partial (m, l, acc).  The cheap
+cross-page softmax combine runs at the XLA level, identical to the dense
+kernel's cross-split combine.
+
+Arena layout is the serving layout ``(num_pages, BLOCK, n_kv, D)``
+(models/lm.py ``paged_arena_zeros``); the wrapper transposes to the
+VMEM-friendly ``(num_pages, n_kv, BLOCK, D)`` tiling at the XLA level.
+Logical slot ``j * BLOCK + t`` holds absolute position ``j * BLOCK + t``,
+so one per-request valid length masks the unwritten tail of the last page
+and every unallocated table entry at once.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
+                  l_ref, *, scale, softcap, blk, window):
+    j = pl.program_id(1)                                   # logical page
+    q = q_ref[0].astype(jnp.float32) * scale               # (1, D)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (blk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    valid_len = len_ref[0, 0]                              # scalar int32
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (1, blk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = j * blk + jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)
+    mask = pos < valid_len
+    if window is not None:
+        mask &= pos >= (valid_len - window)
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max()
+    p = jnp.exp(s - m)
+    l = p.sum()
+    acc = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))  # (1, D)
+    o_ref[0, 0] = acc.astype(o_ref.dtype)
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+
+
+def paged_decode_attention_pallas(q, k_arena, v_arena, page_table, lengths,
+                                  *, window=None, softcap=None, scale=None,
+                                  interpret=False):
+    """q: (B, H, D); arenas: (P, BLOCK, Hkv, D); page_table: (B, n_pg)
+    physical page per logical block; lengths: (B,) valid tokens (0 for a
+    masked slot-pool row — its partials are uniform garbage the caller
+    discards).  Returns (B, H, D)."""
+    B, H, D = q.shape
+    P, blk, Hkv, _ = k_arena.shape
+    group = H // Hkv
+    n_pg = page_table.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    ka = k_arena.transpose(0, 2, 1, 3)                     # (P, Hkv, blk, D)
+    va = v_arena.transpose(0, 2, 1, 3)
+
+    kern = functools.partial(_paged_kernel, scale=scale, softcap=softcap,
+                             blk=blk, window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                             # the page table
+        grid=(B * H, n_pg),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, j, pt: (bh // H, 0)),
+            pl.BlockSpec((1, 1, D), lambda bh, j, pt: (bh // H, bh % H, 0)),
+            pl.BlockSpec((1, 1, blk, D),
+                         lambda bh, j, pt: (pt[bh // H, j],
+                                            (bh % H) // group, 0, 0)),
+            pl.BlockSpec((1, 1, blk, D),
+                         lambda bh, j, pt: (pt[bh // H, j],
+                                            (bh % H) // group, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda bh, j, pt: (bh // H, bh % H, j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bh, j, pt: (bh // H, bh % H, j)),
+            pl.BlockSpec((1, 1, 1), lambda bh, j, pt: (bh // H, bh % H, j)),
+        ],
+    )
+    out, ms, ls = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, n_pg, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, n_pg), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, n_pg), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table.astype(jnp.int32),
+      lengths.reshape(B, 1).astype(jnp.int32), q, ka, va)
+
+    # cross-page combine (cheap, XLA level) — same as the dense kernel
+    m_all = ms.max(axis=-1, keepdims=True)                 # (B, H, 1)
+    w = jnp.exp(ms - m_all)                                # (B, H, n_pg)
+    l_tot = (ls * w).sum(-1)                               # (B, H)
+    o = (out * w[..., None]).sum(2) / jnp.maximum(l_tot, 1e-20)[..., None]
+    return o.astype(q.dtype)

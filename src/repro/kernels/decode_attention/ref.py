@@ -28,3 +28,21 @@ def decode_attention_ref(q, k, v, lengths, *, window=None, softcap=None,
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhk,bhkd->bhd", p,
                       vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_arena, v_arena, page_table, lengths, *,
+                               window=None, softcap=None, scale=None):
+    """Oracle for the paged kernel: gather pages at the XLA level into the
+    dense per-request layout, then run the dense oracle.  q: (B, H, D);
+    arenas: (P, BLOCK, Hkv, D); page_table: (B, n_pg); lengths: (B,)."""
+    B = q.shape[0]
+    blk = k_arena.shape[1]
+    n_pg = page_table.shape[1]
+
+    def dense(arena):
+        g = jnp.take(arena, page_table.reshape(-1), axis=0)
+        g = g.reshape(B, n_pg * blk, *arena.shape[2:])     # (B, S, Hkv, D)
+        return g.transpose(0, 2, 1, 3)                     # (B, Hkv, S, D)
+
+    return decode_attention_ref(q, dense(k_arena), dense(v_arena), lengths,
+                                window=window, softcap=softcap, scale=scale)

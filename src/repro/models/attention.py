@@ -203,6 +203,93 @@ def update_cache(k_cache, v_cache, kv_positions, k_new, v_new, slot):
     return k_cache, v_cache, kv_positions
 
 
+# --------------------------------------------------------------------------
+# Paged KV: block-granular arena indexed by per-request page tables
+# --------------------------------------------------------------------------
+#
+# The arena is node-wide: one (num_pages, BLOCK, nkv, h) K and V slab per
+# layer; a request's KV lives in the physical pages its page table names,
+# so two requests sharing a prompt prefix alias the same pages instead of
+# holding copies.  Physical page 0 is a scratch page (serving/page_pool):
+# masked slot-pool rows scatter there and never read it back unmasked.
+
+def gather_pages(arena, page_table):
+    """arena: (P, BLOCK, nkv, h); page_table: (B, n_pg) int32 physical page
+    per logical block -> (B, n_pg * BLOCK, nkv, h) dense per-request view.
+
+    Logical position j of row b lives at arena[page_table[b, j // BLOCK],
+    j % BLOCK]; unallocated table entries point at the scratch page and are
+    masked by position in the attention that consumes the gather."""
+    B, n_pg = page_table.shape
+    blk = arena.shape[1]
+    g = jnp.take(arena, page_table.reshape(-1), axis=0)
+    return g.reshape(B, n_pg * blk, *arena.shape[2:])
+
+
+def update_paged_cache(k_arena, v_arena, k_new, v_new, page_table, pos):
+    """Scatter (B, 1, nkv, h) new K/V into the arena at each row's write
+    page: physical page ``page_table[b, pos[b] // BLOCK]``, offset
+    ``pos[b] % BLOCK``.  Rows whose table points at the scratch page
+    (inactive slots) write there harmlessly."""
+    B = page_table.shape[0]
+    blk = k_arena.shape[1]
+    bidx = jnp.arange(B)
+    phys = page_table[bidx, pos // blk]               # (B,)
+    off = pos % blk
+    k_arena = k_arena.at[phys, off].set(k_new[:, 0])
+    v_arena = v_arena.at[phys, off].set(v_new[:, 0])
+    return k_arena, v_arena
+
+
+def paged_decode_attention(cfg, q, k_arena, v_arena, page_table, pos,
+                           window: Optional[int] = None, active=None):
+    """One-token decode over paged KV.  q: (B, 1, nq, h); arenas:
+    (P, BLOCK, nkv, h); page_table: (B, n_pg); pos: (B,).
+
+    Gathers each row's pages into a dense (B, S, nkv, h) view and reuses
+    ``decode_attention``: logical slot j holds absolute position j, so the
+    position mask (<= pos, window) covers both the unwritten tail of the
+    last page and unallocated table entries.  On TPU with ``cfg.
+    use_kernels`` the gather happens inside the Pallas kernel via a
+    scalar-prefetched page table (kernels/decode_attention/paged)."""
+    B = q.shape[0]
+    blk = k_arena.shape[1]
+    S = page_table.shape[1] * blk
+    if cfg.use_kernels and jax.default_backend() == "tpu":
+        from repro.kernels.decode_attention import paged_decode_attention \
+            as paged_op
+        lengths = jnp.where(active, pos + 1, 0) if active is not None \
+            else pos + 1
+        o = paged_op(q[:, 0],                         # (B, H, h)
+                     k_arena, v_arena, page_table, lengths,
+                     window=window, softcap=cfg.attn_softcap or None,
+                     scale=_scale(cfg))
+        return o[:, None]                             # (B, 1, H, h)
+    kd = gather_pages(k_arena, page_table)
+    vd = gather_pages(v_arena, page_table)
+    kv_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return decode_attention(cfg, q, kd, vd, kv_pos, pos,
+                            window=window, active=active)
+
+
+def paged_prefill_attention(cfg, q, k_arena, v_arena, page_table,
+                            q_positions, window: Optional[int] = None,
+                            block_q: int = 512):
+    """Chunked-prefill attention over paged KV: the chunk's own K/V must
+    already be scattered into the arena (update happens before attention,
+    matching the decode path).  q: (B, C, nq, h); q_positions: (B, C).
+    Causal masking over logical positions covers the not-yet-written tail
+    of the write page and unallocated table entries."""
+    B = q.shape[0]
+    blk = k_arena.shape[1]
+    S = page_table.shape[1] * blk
+    kd = gather_pages(k_arena, page_table)
+    vd = gather_pages(v_arena, page_table)
+    kv_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return full_attention(cfg, q, kd, vd, q_positions, kv_pos,
+                          causal=True, window=window, block_q=block_q)
+
+
 def attn_layer_forward(cfg, p, x, positions, window=None, causal=True,
                        memory=None, block_q: int = 512):
     """Full-sequence layer: self-attention, or cross-attention if memory."""

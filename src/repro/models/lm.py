@@ -242,6 +242,68 @@ def layer_cache_zeros(cfg, spec, B, max_len, T_mem):
 
 
 # ==========================================================================
+# Paged KV: per-layer arena scatter/attend (pure-attention patterns only)
+# ==========================================================================
+#
+# The paged pool replaces each request's dense ``max_len`` KV strip with
+# block-granular pages in a node-wide (num_pages, BLOCK, nkv, h) arena per
+# layer (stacked over repeats: (R, num_pages, BLOCK, nkv, h)).  A request
+# is a page table — int32 physical page per logical block — so a prefix-
+# cache hit aliases the holder's pages (refcount bump, serving/page_pool)
+# instead of copying KV bytes, and pool memory scales with live tokens.
+# Recurrent mixers (mamba/xLSTM) summarize the whole stream in O(1) state
+# and have nothing to page; those families keep the dense slot pool.
+
+def layer_decode_paged(cfg, spec, p, x, pos, arena, page_table,
+                       active=None, write=True):
+    """Paged analogue of ``layer_decode`` for ``attn`` mixers.  arena:
+    {"k","v"}: (P, BLOCK, nkv, h); page_table: (B, n_pg); pos: (B,).
+    ``write=False`` skips the arena scatter (query-only replay over fully
+    cached tokens — never mutate pages another request may alias)."""
+    h = common.apply_norm(cfg, p["norm1"], x)
+    q, k, v = attention.project_qkv(cfg, p["mixer"], h, pos[:, None],
+                                    rope=True)
+    ka, va = arena["k"], arena["v"]
+    if write:
+        ka, va = attention.update_paged_cache(ka, va, k, v, page_table, pos)
+    o = attention.paged_decode_attention(cfg, q, ka, va, page_table, pos,
+                                         window=spec.window, active=active)
+    h = attention.out_proj(cfg, p["mixer"], o)
+    if cfg.double_norm:
+        h = common.apply_norm(cfg, p["norm1b"], h)
+    x = x + h
+    x, _ = _ffn_block(cfg, spec, p, x)
+    return x, {"k": ka, "v": va}
+
+
+def layer_prefill_paged(cfg, spec, p, x, pos0, arena, page_table,
+                        block_q=64):
+    """One teacher-forced prefill chunk: scatter the chunk's K/V into its
+    (freshly allocated) write pages, then attend over all pages.  x:
+    (B, C, d) with C == BLOCK and ``pos0`` (B,) block-aligned, so the
+    chunk covers exactly logical block ``pos0 // BLOCK`` of every row."""
+    B, C, _ = x.shape
+    ka, va = arena["k"], arena["v"]
+    blk = ka.shape[1]
+    positions = pos0[:, None] + jnp.arange(C)[None]
+    h = common.apply_norm(cfg, p["norm1"], x)
+    q, k, v = attention.project_qkv(cfg, p["mixer"], h, positions,
+                                    rope=True)
+    phys = page_table[jnp.arange(B), pos0 // blk]      # (B,)
+    ka = ka.at[phys].set(k)
+    va = va.at[phys].set(v)
+    o = attention.paged_prefill_attention(cfg, q, ka, va, page_table,
+                                          positions, window=spec.window,
+                                          block_q=block_q)
+    h = attention.out_proj(cfg, p["mixer"], o)
+    if cfg.double_norm:
+        h = common.apply_norm(cfg, p["norm1b"], h)
+    x = x + h
+    x, _ = _ffn_block(cfg, spec, p, x)
+    return x, {"k": ka, "v": va}
+
+
+# ==========================================================================
 # Slot-pool cache helpers (continuous batching)
 # ==========================================================================
 #
@@ -451,6 +513,73 @@ class LM:
         x = common.apply_norm(cfg, params["final_norm"], x)
         logits = self._logits(params, x[:, -1])
         return logits, cache
+
+    # ---------------- paged serving (pure-attention patterns) ----------
+    def supports_paging(self) -> bool:
+        """Only attention KV has per-position state to page; recurrent and
+        cross-attention mixers keep the dense slot pool."""
+        return all(s.mixer == "attn" for s in self.cfg.pattern)
+
+    def paged_arena_zeros(self, num_pages, block):
+        """Node-wide paged KV arena: per pattern position {"k","v"} leaves
+        of shape (R, num_pages, BLOCK, nkv, d_head).  Page 0 is the
+        scratch page (serving/page_pool.NULL_PAGE)."""
+        cfg = self.cfg
+        assert self.supports_paging(), cfg.name
+        z = jnp.zeros((cfg.n_repeats, num_pages, block, cfg.n_kv_heads,
+                       cfg.d_head), cfg.compute_dtype)
+        return tuple({"k": z, "v": z} for _ in cfg.pattern)
+
+    def prefill_paged(self, params, arena, page_tables, tokens, pos0):
+        """One teacher-forced chunk of prompt prefill over the paged pool.
+
+        tokens: (B, C) with C == BLOCK; pos0: (B,) block-aligned chunk
+        start.  Scatters the chunk's K/V into each row's write page and
+        returns logits for EVERY chunk position ((B, C, V) — the caller
+        picks the last real token's row; pad tail K/V is overwritten by
+        later writes before any mask exposes it), plus the updated arena.
+        """
+        cfg = self.cfg
+        B, C = tokens.shape
+        positions = pos0[:, None] + jnp.arange(C)[None]
+        x = self._embed(params, tokens, positions)
+
+        def body(x, xs):
+            bp, ar = xs
+            new = []
+            for i, spec in enumerate(cfg.pattern):
+                x, a = layer_prefill_paged(cfg, spec, bp[i], x, pos0,
+                                           ar[i], page_tables)
+                new.append(a)
+            return constraints.constrain_batch(x), tuple(new)
+
+        x, arena = jax.lax.scan(body, x, (params["blocks"], arena))
+        x = common.apply_norm(cfg, params["final_norm"], x)
+        return self._logits(params, x), arena
+
+    def decode_paged(self, params, arena, page_tables, tokens, pos,
+                     active=None, write=True):
+        """Paged analogue of ``decode``: tokens (B, 1), pos (B,),
+        page_tables (B, n_pg) physical page per logical block.  With
+        ``write=False`` the arena is returned untouched (query-only replay
+        for full prefix hits — aliased pages are never mutated)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, pos[:, None])
+
+        def body(x, xs):
+            bp, ar = xs
+            new = []
+            for i, spec in enumerate(cfg.pattern):
+                x, a = layer_decode_paged(cfg, spec, bp[i], x, pos, ar[i],
+                                          page_tables, active=active,
+                                          write=write)
+                new.append(a)
+            return constraints.constrain_batch(x), tuple(new)
+
+        x, arena = jax.lax.scan(body, x, (params["blocks"], arena))
+        x = common.apply_norm(cfg, params["final_norm"], x)
+        logits = self._logits(params, x[:, -1])
+        return logits, arena
 
     # ---------------- cache scaffolding ----------------
     def cache_zeros(self, B, max_len, T_mem=0):

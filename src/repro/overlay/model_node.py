@@ -101,7 +101,11 @@ class ModelNode:
                "active": self.active_requests,
                "hw": self.hw_score,
                "kv_usage": self.engine.prefix_cache.used_bytes
-               if self.engine else 0}
+               if self.engine else 0,
+               # paged real engine: free-page pressure (fraction of the KV
+               # arena in use) — a truer admission signal than slot count,
+               # since memory, not rows, is what blocks admission
+               "kv_pressure": self._kv_pressure()}
         size = 32 + sum(len(p) for p in paths)  # compact hash paths
         for m in self.group:
             if m != self.node_id:
@@ -112,12 +116,22 @@ class ModelNode:
         me.active_requests = self.active_requests
         me.hw_score = self.hw_score
 
+    def _kv_pressure(self) -> float:
+        """Fraction of the paged KV arena in use (0 when no paged real
+        engine is attached — the latency model has no physical pool)."""
+        eng = self.real_engine
+        if eng is None or not getattr(eng, "paged", False):
+            return 0.0
+        alloc = eng.allocator
+        return alloc.used_count / max(1, alloc.num_pages - 1)
+
     def _handle_sync(self, net, msg):
         nid = msg["from"]
         p = self.peers.setdefault(nid, PeerInfo(nid))
         p.active_requests = msg["active"]
         p.hw_score = msg["hw"]
         p.kv_usage = msg.get("kv_usage", 0)
+        p.kv_pressure = msg.get("kv_pressure", 0.0)
         self.hrtree.merge_paths(msg["paths"], nid)
 
     # ------------------------------------------------------------------

@@ -1,10 +1,14 @@
 """Per-node LLM serving engines.
 
 RealEngine — wraps a JAX model (repro.models.lm.LM): prefill + greedy/top-k
-decode with KV-prefix reuse.  Prefix hits restore the cached KV pytree and
-feed only the suffix (teacher-forced decode-append), so a request sharing a
-10k-token system prompt pays only for its unique tail — the mechanism whose
-*group-wide* version the HR-tree provides.
+decode with KV-prefix reuse.  Pure-attention families serve from a **paged
+KV pool**: a node-wide per-layer page arena (models/lm.py
+``paged_arena_zeros``) plus per-request page tables, so a prefix-cache hit
+*aliases* the holder's pages with a refcount bump (serving/page_pool)
+instead of copying a cache pytree — admission is O(suffix), not O(cache
+bytes), and KV memory scales with live tokens.  Recurrent families
+(mamba/xLSTM) fall back to the dense batch-1 cache path.  This is the
+node-local mechanism whose *group-wide* version the HR-tree provides.
 
 LatencyEngine — a calibrated cost model (prefill/decode tokens-per-second,
 continuous-batching slots) for overlay-scale simulations where running a
@@ -24,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm import cache_slot_read, cache_slot_write
-from repro.serving.prefix_cache import PrefixCache
+from repro.serving.page_pool import OutOfPages, PagedHandle, PageAllocator
+from repro.serving.prefix_cache import BLOCK, PrefixCache
 
 
 @dataclass
@@ -49,17 +54,21 @@ class Result:
 
 @dataclass
 class PrefillState:
-    """Slot-ready request state: a batch-1 cache pytree positioned at
-    ``pos`` with the logits of the last prompt token."""
+    """Slot-ready request state positioned at ``pos`` with the logits of
+    the last prompt token.  Dense engines carry a batch-1 cache pytree in
+    ``cache``; paged engines carry the request's physical page list in
+    ``pages`` (the KV itself lives in the engine's shared arena)."""
     cache: object
     logits: object      # (1, padded_vocab)
     pos: int
     matched: int        # prefix-cache tokens reused
+    pages: Optional[list] = None
 
 
 class RealEngine:
     def __init__(self, cfg, model, params, cache_bytes: int = 1 << 30,
-                 max_len: int = 1024):
+                 max_len: int = 1024, paged: Optional[bool] = None,
+                 num_pages: Optional[int] = None):
         self.cfg = cfg
         self.model = model
         self.params = params
@@ -72,6 +81,23 @@ class RealEngine:
         self.partial_reuse = all(s.mixer in ("attn", "cross_attn")
                                  for s in cfg.pattern)
         self.batched_traces = 0   # compilations of the slot-pool decode
+        # paged KV pool: pure-attention families only (recurrent mixers
+        # have O(1) state — nothing to page)
+        self.paged = (model.supports_paging() if paged is None
+                      else bool(paged) and model.supports_paging())
+        self.block = BLOCK
+        if self.paged:
+            self.max_pages = -(-max_len // BLOCK)     # table width (ceil)
+            # page 0 is scratch; default arena fits ~16 max_len streams —
+            # under pressure the prefix cache is evicted page-by-page
+            self.num_pages = num_pages or (1 + 16 * self.max_pages)
+            self.allocator = PageAllocator(self.num_pages)
+            self.arena = model.paged_arena_zeros(self.num_pages, BLOCK)
+            self.page_bytes = sum(
+                x.shape[0] * BLOCK * x.shape[3] * x.shape[4]
+                * x.dtype.itemsize for x in jax.tree.leaves(self.arena))
+            self.prefix_cache.on_release = \
+                lambda h: self.allocator.decref(h.pages)
 
         def _prefill(params, tokens):
             return model.prefill(params, tokens, max_len=max_len,
@@ -89,15 +115,103 @@ class RealEngine:
         self._decode_batched = jax.jit(_decode_batched)
         self._slot_write = jax.jit(cache_slot_write)
         self._slot_read = jax.jit(cache_slot_read)
+        if self.paged:
+            # donate the arena so scatters update it in place where the
+            # backend supports donation (CPU silently copies)
+            donate = () if jax.default_backend() == "cpu" else (1,)
+
+            def _prefill_paged(params, arena, pt, tok, pos0):
+                return model.prefill_paged(params, arena, pt, tok, pos0)
+
+            def _decode_paged(params, arena, pt, tok, pos):
+                return model.decode_paged(params, arena, pt, tok, pos)
+
+            def _query_paged(params, arena, pt, tok, pos):
+                logits, _ = model.decode_paged(params, arena, pt, tok, pos,
+                                               write=False)
+                return logits
+
+            def _decode_paged_batched(params, arena, pt, tok, pos, active):
+                self.batched_traces += 1   # trace-time side effect only
+                return model.decode_paged(params, arena, pt, tok, pos,
+                                          active=active)
+
+            self._prefill_paged = jax.jit(_prefill_paged,
+                                          donate_argnums=donate)
+            self._decode_paged = jax.jit(_decode_paged,
+                                         donate_argnums=donate)
+            self._query_paged = jax.jit(_query_paged)
+            # same attribute as the dense pool decode on purpose: the
+            # scheduler (and dispatch-count tests) treat "the one batched
+            # decode" uniformly across modes
+            self._decode_batched = jax.jit(_decode_paged_batched,
+                                           donate_argnums=donate)
 
     def _cache_nbytes(self, cache) -> int:
         return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
 
+    # ------------------------------------------------------------------
+    # paged-pool page management (host side)
+    # ------------------------------------------------------------------
+    def alloc_pages(self, n: int = 1) -> list:
+        """Allocate ``n`` pages, evicting LRU prefix-cache entries under
+        pressure (their pages free once no live request aliases them)."""
+        while True:
+            try:
+                return self.allocator.alloc(n)
+            except OutOfPages:
+                if not self.prefix_cache.pop_lru():
+                    raise
+
+    def release_pages(self, pages):
+        self.allocator.decref(pages)
+
+    def ensure_page_for(self, pages: list, pos: int):
+        """Grow ``pages`` so the block holding position ``pos`` exists
+        (called before every decode write that may cross into a new
+        block)."""
+        while len(pages) <= pos // self.block:
+            pages.extend(self.alloc_pages(1))
+
+    def page_table_row(self, pages) -> np.ndarray:
+        """(1, max_pages) int32 page-table row; unallocated logical blocks
+        point at the scratch page 0 and are masked by position."""
+        row = np.zeros((1, self.max_pages), np.int32)
+        row[0, :len(pages)] = pages
+        return row
+
+    def insert_prefix(self, full_tokens, pages):
+        """Zero-copy prefix-cache insert: the entry holds page ids (one
+        extra reference each), never KV bytes."""
+        n_cov = len(full_tokens) // self.block
+        if not n_cov:
+            return
+        covered = list(pages[:n_cov])
+        self.allocator.incref(covered)
+        handle = PagedHandle(tuple(covered), n_cov * self.block)
+        self.prefix_cache.insert(full_tokens, handle,
+                                 n_cov * self.page_bytes)
+
+    def live_kv_bytes(self) -> int:
+        """Physical KV footprint: pages in use x bytes per page (aliased
+        pages counted once — the point of the paged pool)."""
+        if not self.paged:
+            return self.prefix_cache.used_bytes
+        return self.allocator.used_count * self.page_bytes
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
     def prefill_request(self, req: Request) -> PrefillState:
-        """Prefix-cache match + prefill + teacher-forced suffix replay.
+        """Prefix-cache match + prefill of the uncached suffix.
 
         Shared by the sequential ``generate`` path and slot-pool admission
-        (serving/scheduler.py); returns a batch-1 slot-ready state."""
+        (serving/scheduler.py); returns a batch-1 slot-ready state.  Paged
+        engines alias a hit's pages (refcount bump, no KV copy) and run
+        the suffix through the chunked paged prefill; dense engines keep
+        the PR-1 boot-prefill + teacher-forced decode-append replay."""
+        if self.paged:
+            return self._prefill_request_paged(req)
         toks = [int(t) for t in req.tokens]
         matched, entry = self.prefix_cache.match(toks)
         if entry is not None and matched >= 8 and self.partial_reuse:
@@ -121,8 +235,67 @@ class RealEngine:
                 jnp.asarray([pos - 1], jnp.int32))
         return PrefillState(cache, logits, pos, matched)
 
+    def _prefill_request_paged(self, req: Request) -> PrefillState:
+        """Paged admission: alias cached pages, chunk-prefill the suffix.
+
+        A hit contributes its pages by reference (refcount bump — zero KV
+        bytes move); the uncached suffix is processed in BLOCK-token
+        teacher-forced chunks, each ONE dispatch that scatters the chunk's
+        K/V into a fresh page and attends over the whole page table —
+        admission cost is O(suffix), never O(cached prefix)."""
+        toks = [int(t) for t in req.tokens]
+        blk = self.block
+        matched, entry = self.prefix_cache.match(toks)
+        pages: list = []
+        if (entry is not None and isinstance(entry.handle, PagedHandle)
+                and matched >= blk):
+            shared = list(entry.handle.pages[:matched // blk])
+            self.allocator.incref(shared)        # zero-copy alias
+            pages, pos = shared, matched
+        else:
+            matched, pos = 0, 0
+        logits_last = None
+        try:
+            pos, logits_last = self._prefill_chunks(toks, pages, pos)
+        except BaseException:
+            if pages:                # release aliased + fresh references
+                self.allocator.decref(pages)
+            raise
+        if logits_last is None:
+            # block-aligned prompt fully cached: query-only replay of the
+            # last token — aliased pages are never written
+            pt = jnp.asarray(self.page_table_row(pages))
+            logits_last = self._query_paged(
+                self.params, self.arena, pt,
+                jnp.asarray([[toks[-1]]], jnp.int32),
+                jnp.asarray([pos - 1], jnp.int32))
+        return PrefillState(None, logits_last, pos, matched, pages=pages)
+
+    def _prefill_chunks(self, toks, pages, pos):
+        blk = self.block
+        logits_last = None
+        while pos < len(toks):
+            pages.extend(self.alloc_pages(1))
+            # pad tail of the last partial chunk: pad logits are ignored
+            # and pad K/V is overwritten by later decode writes before any
+            # position mask exposes it
+            chunk = toks[pos:pos + blk]
+            buf = chunk + [0] * (blk - len(chunk))
+            pt = jnp.asarray(self.page_table_row(pages))
+            logits, self.arena = self._prefill_paged(
+                self.params, self.arena, pt,
+                jnp.asarray([buf], jnp.int32), jnp.asarray([pos], jnp.int32))
+            logits_last = logits[:, len(chunk) - 1]
+            pos += len(chunk)
+        return pos, logits_last
+
+    # ------------------------------------------------------------------
+    # sequential generation
+    # ------------------------------------------------------------------
     def generate(self, req: Request, now: float = 0.0) -> Result:
         """One-slot sequential decode (thin wrapper over prefill_request)."""
+        if self.paged:
+            return self._generate_paged(req)
         t0 = time.monotonic()
         st = self.prefill_request(req)
         cache, logits, pos = st.cache, st.logits, st.pos
@@ -142,6 +315,34 @@ class RealEngine:
         # pos counts exactly the tokens whose state is in the cache
         full = ([int(t) for t in req.tokens] + out)[:pos]
         self.prefix_cache.insert(full, cache, self._cache_nbytes(cache))
+        return Result(req.req_id, out, ttft=ttft,
+                      total=time.monotonic() - t0,
+                      cached_tokens=st.matched,
+                      prompt_tokens=len(req.tokens))
+
+    def _generate_paged(self, req: Request) -> Result:
+        t0 = time.monotonic()
+        st = self.prefill_request(req)
+        pages, logits, pos = st.pages, st.logits, st.pos
+        ttft = time.monotonic() - t0
+        out = []
+        try:
+            for _ in range(req.max_new):
+                nxt = int(jnp.argmax(logits[0]))
+                out.append(nxt)
+                if nxt == req.eos_id or pos >= self.max_len - 1:
+                    break
+                self.ensure_page_for(pages, pos)
+                logits, self.arena = self._decode_paged(
+                    self.params, self.arena,
+                    jnp.asarray(self.page_table_row(pages)),
+                    jnp.asarray([[nxt]], jnp.int32),
+                    jnp.asarray([pos], jnp.int32))
+                pos += 1
+            full = ([int(t) for t in req.tokens] + out)[:pos]
+            self.insert_prefix(full, pages)  # zero-copy (page refs)
+        finally:
+            self.release_pages(pages)        # request's own reference
         return Result(req.req_id, out, ttft=ttft,
                       total=time.monotonic() - t0,
                       cached_tokens=st.matched,
@@ -169,7 +370,6 @@ class LatencyEngine:
         self.ecfg = ecfg
         self.prefix_cache = PrefixCache(cache_bytes)
         self.busy: list[float] = []       # completion times of active slots
-        self.active = 0
 
     def service_times(self, n_prompt: int, n_cached: int, n_out: int,
                       now: float) -> tuple[float, float]:

@@ -48,6 +48,10 @@ class PrefixCache:
         self.misses = 0
         self.hit_tokens = 0
         self.total_tokens = 0
+        # called with entry.handle when an entry becomes unreachable; a
+        # paged engine hooks this to decref the entry's pages (pages stay
+        # physically live while any in-flight request still aliases them)
+        self.on_release = None
 
     # ---- lookup ----
     def match(self, tokens: Sequence[int]) -> tuple[int, Optional[Entry]]:
@@ -97,6 +101,13 @@ class PrefixCache:
             self._by_chain[key] = entry
         self._evict()
 
+    def _release(self, e: Entry):
+        """An entry just became unreachable: return its bytes and hand its
+        handle to the release hook exactly once."""
+        self.used_bytes -= e.nbytes
+        if self.on_release is not None and e.handle is not None:
+            self.on_release(e.handle)
+
     def _unlink(self, e: Entry, key: bytes):
         """Take one chain key away from ``e`` (the caller re-points it);
         once an entry holds no keys it is unreachable — release its bytes
@@ -106,14 +117,14 @@ class PrefixCache:
         except ValueError:
             return
         if not e.keys:
-            self.used_bytes -= e.nbytes
+            self._release(e)
 
     def _drop(self, e: Entry):
         for k in e.keys:
             if self._by_chain.get(k) is e:
                 self._by_chain.pop(k)
         e.keys.clear()
-        self.used_bytes -= e.nbytes
+        self._release(e)
 
     def _evict(self):
         if self.used_bytes <= self.max_bytes:
@@ -125,11 +136,25 @@ class PrefixCache:
                 break
             self._drop(e)
 
+    def pop_lru(self) -> bool:
+        """Drop the least-recently-used entry (allocator-pressure path: a
+        paged engine evicts until enough pages come free).  False if
+        empty."""
+        entries = {id(e): e for e in self._by_chain.values()}.values()
+        if not entries:
+            return False
+        self._drop(min(entries, key=lambda e: e.last_used))
+        return True
+
     # ---- HR-tree sync ----
     def cached_prefixes(self) -> list[tuple]:
         """(token-length, entry) view used to build HR-tree broadcasts —
-        callers keep the original token streams alongside handles."""
-        return [(e.length, e) for e in self._by_chain.values()]
+        callers keep the original token streams alongside handles.
+        Deduped by entry identity: an entry is indexed once per chain
+        depth, and counting it once per key would inflate the node's
+        advertised prefix count in every HR-tree broadcast."""
+        uniq = {id(e): e for e in self._by_chain.values()}
+        return [(e.length, e) for e in uniq.values()]
 
     @property
     def hit_rate(self) -> float:

@@ -1,16 +1,25 @@
 """Slot-pool continuous-batching scheduler for the real engine.
 
-The pool is a fixed ``(R, max_active, ...)``-batched decode cache
-(models/lm.py slot helpers).  Admission prefills a request on the batch-1
-path and *scatters* its cache into a free batch row; every ``step()`` then
-issues ONE jitted ``decode(params, cache, tokens(B,1), pos(B,),
-active(B,))`` dispatch for the whole pool — dead rows are masked, not
-recompiled — and token selection / EOS handling is vectorized over the
-batch.  Completion *gathers* the row back out for ``PrefixCache.insert``.
+Every ``step()`` issues ONE jitted batched decode dispatch for the whole
+pool — dead rows are masked, not recompiled — and token selection / EOS
+handling is vectorized over the batch.
+
+With a **paged engine** (serving/engine.py, pure-attention families) the
+pool is a host-side ``(max_active, max_pages)`` page-table array over the
+engine's node-wide KV arena: admission installs the request's page list
+into a free row (a prefix-cache hit arrives as *aliased* pages — zero KV
+bytes copied), a fresh page is allocated only when a row's position
+crosses a block boundary, and completion registers the row's pages with
+``PrefixCache`` by reference and drops the request's refcount.  Dense
+engines (recurrent mixers) keep the PR-1 ``(R, max_active, ...)`` cache
+pool with scatter-on-admit / gather-on-finish.
+
 Admission keeps session stickiness semantics and a longest-prefix-match
 preference (the node-local analogue of the HR-tree's group-level cache
-affinity), probed read-only via ``PrefixCache.peek`` so the scan does not
-skew hit-rate stats or LRU order.
+affinity).  The match length is probed read-only via ``PrefixCache.peek``
+ONCE at submit time and carried with the queued request — the admission
+scan ranks on the cached hint instead of re-hashing every queued prompt on
+every admission.
 """
 from __future__ import annotations
 
@@ -33,6 +42,13 @@ class _Slot:
     t_start: float = 0.0
     ttft: float = 0.0
     cached_tokens: int = 0
+    pages: list = field(default_factory=list)   # paged engines only
+
+
+@dataclass
+class _Queued:
+    req: Request
+    hint: int           # block-aligned prefix-cache match length at submit
 
 
 class Scheduler:
@@ -46,18 +62,30 @@ class Scheduler:
         self.done: list[Result] = []
         self.metrics = {"admitted": 0, "completed": 0, "queue_peak": 0,
                         "decode_calls": 0, "rounds": 0}
-        # the slot pool: one batched cache pytree + one batched logits row
-        # per slot, allocated once for the engine's max_len
-        self._cache = engine.model.cache_zeros(max_active, engine.max_len)
         self._logits = jnp.zeros((max_active, engine.cfg.padded_vocab),
                                  jnp.float32)
+        if engine.paged:
+            # page-table pool: rows of physical page ids into the engine's
+            # shared arena; 0 = scratch page (inactive / unallocated)
+            self._cache = None
+            self._ptab = np.zeros((max_active, engine.max_pages), np.int32)
+        else:
+            # dense pool: one batched cache pytree allocated once for the
+            # engine's max_len
+            self._cache = engine.model.cache_zeros(max_active,
+                                                   engine.max_len)
+            self._ptab = None
 
     @property
     def active(self) -> list:
         return [s for s in self.slots if s is not None]
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        hint = 0
+        if self.prefer_cache_hits:
+            hint, _ = self.engine.prefix_cache.peek(
+                [int(t) for t in req.tokens])
+        self.queue.append(_Queued(req, hint))
         self.metrics["queue_peak"] = max(self.metrics["queue_peak"],
                                          len(self.queue))
 
@@ -66,15 +94,13 @@ class Scheduler:
         ix = 0
         if self.prefer_cache_hits and len(self.queue) > 1:
             best, best_len = 0, -1
-            for i, r in enumerate(self.queue):
-                ln, _ = self.engine.prefix_cache.peek(
-                    [int(t) for t in r.tokens])
-                if ln > best_len:
-                    best, best_len = i, ln
+            for i, q in enumerate(self.queue):
+                if q.hint > best_len:
+                    best, best_len = i, q.hint
             ix = best
-        req = self.queue[ix]
+        q = self.queue[ix]
         del self.queue[ix]
-        return req
+        return q.req
 
     def _admit_one(self):
         free = next((i for i, s in enumerate(self.slots) if s is None), None)
@@ -84,11 +110,18 @@ class Scheduler:
         t0 = time.monotonic()
         eng = self.engine
         st = eng.prefill_request(req)
-        self._cache = eng._slot_write(self._cache, st.cache, free)
+        if eng.paged:
+            # zero-copy admission: the slot row IS the page table — shared
+            # prefix pages alias the cache holder's pages (refcounted)
+            self._ptab[free, :] = 0
+            self._ptab[free, :len(st.pages)] = st.pages
+        else:
+            self._cache = eng._slot_write(self._cache, st.cache, free)
         self._logits = self._logits.at[free].set(st.logits[0])
         self.slots[free] = _Slot(req, st.pos, t_start=t0,
                                  ttft=time.monotonic() - t0,
-                                 cached_tokens=st.matched)
+                                 cached_tokens=st.matched,
+                                 pages=st.pages or [])
         self.metrics["admitted"] += 1
 
     # ------------------------------------------------------------------
@@ -113,12 +146,15 @@ class Scheduler:
                 finished.append(i)
             else:
                 cont.append(i)
-        # gather completed rows BEFORE the pool decode: the batched dispatch
-        # writes every row (dead rows included, masked only in attention
-        # scores), so a finished slot's KV must be snapshot first
+        # retire completed rows BEFORE the pool decode.  Dense pool: the
+        # batched dispatch writes every row, so a finished slot's KV must
+        # be gathered first.  Paged pool: the finished row's pages must be
+        # handed to the prefix cache (and its table row zeroed onto the
+        # scratch page) before anything else dispatches.
         for i in finished:
             self._finish_slot(i)
         if cont:
+            eng = self.engine
             B = self.max_active
             tok = np.zeros((B, 1), np.int32)
             pos = np.zeros((B,), np.int32)
@@ -127,9 +163,20 @@ class Scheduler:
                 tok[i, 0] = nxt[i]
                 pos[i] = self.slots[i].pos
                 act[i] = True
-            self._logits, self._cache = self.engine._decode_batched(
-                self.engine.params, self._cache,
-                jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(act))
+                if eng.paged:
+                    # the write position may cross into a new block: grow
+                    # the slot's pages before the single pool dispatch
+                    s = self.slots[i]
+                    eng.ensure_page_for(s.pages, s.pos)
+                    self._ptab[i, :len(s.pages)] = s.pages
+            if eng.paged:
+                self._logits, eng.arena = eng._decode_batched(
+                    eng.params, eng.arena, jnp.asarray(self._ptab),
+                    jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(act))
+            else:
+                self._logits, self._cache = eng._decode_batched(
+                    eng.params, self._cache,
+                    jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(act))
             self.metrics["decode_calls"] += 1
             for i in cont:
                 self.slots[i].pos += 1
@@ -138,12 +185,17 @@ class Scheduler:
         s = self.slots[i]
         self.slots[i] = None
         eng = self.engine
-        kv = eng._slot_read(self._cache, i)
-        # s.pos counts exactly the tokens whose KV is in the slot row (the
+        # s.pos counts exactly the tokens whose KV is in the slot (the
         # finishing token was appended but never pool-decoded) — inserting
-        # more would register block keys over positions that hold zeros
+        # more would register block keys over positions that hold nothing
         full = ([int(t) for t in s.req.tokens] + s.out)[:s.pos]
-        eng.prefix_cache.insert(full, kv, eng._cache_nbytes(kv))
+        if eng.paged:
+            eng.insert_prefix(full, s.pages)   # by reference, zero copy
+            eng.release_pages(s.pages)
+            self._ptab[i, :] = 0
+        else:
+            kv = eng._slot_read(self._cache, i)
+            eng.prefix_cache.insert(full, kv, eng._cache_nbytes(kv))
         self.done.append(Result(s.req.req_id, s.out, ttft=s.ttft,
                                 total=time.monotonic() - s.t_start,
                                 cached_tokens=s.cached_tokens,
@@ -156,3 +208,13 @@ class Scheduler:
             self.step()
             rounds += 1
         return self.done
+
+    # ------------------------------------------------------------------
+    def kv_bytes_in_use(self) -> int:
+        """Physical KV footprint of this pool: live pages for a paged
+        engine, the full dense pool allocation otherwise (the dense pool
+        holds max_active x max_len regardless of occupancy — the contrast
+        bench_throughput reports)."""
+        if self.engine.paged:
+            return self.engine.live_kv_bytes()
+        return self.engine._cache_nbytes(self._cache)

@@ -1,0 +1,98 @@
+"""Property-based page-allocator invariants (hypothesis).
+
+The model under test is the host-side refcounted allocator behind the
+paged KV pool (serving/page_pool.py).  Invariants:
+
+  * alloc never hands out the scratch page or a page somebody holds
+  * refcounts track an independent python model exactly
+  * a page returns to the free list precisely when its last reference
+    drops — aliased pages are never reclaimed while referenced
+  * double free / incref-after-free are hard errors
+  * used_count + free_count == num_pages - 1 at all times
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.page_pool import (NULL_PAGE, OutOfPages, PagedHandle,
+                                     PageAllocator)
+
+# an op is ("alloc", n) | ("incref", i) | ("decref", i) where i picks a
+# live page by index modulo the live set
+OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("alloc"), st.integers(0, 4)),
+        st.tuples(st.just("incref"), st.integers(0, 63)),
+        st.tuples(st.just("decref"), st.integers(0, 63)),
+    ),
+    min_size=1, max_size=200)
+
+
+@given(num_pages=st.integers(2, 40), ops=OPS)
+@settings(max_examples=60, deadline=None)
+def test_refcount_model_agreement(num_pages, ops):
+    a = PageAllocator(num_pages)
+    model = {}                               # page -> refcount
+    for op, arg in ops:
+        if op == "alloc":
+            if arg <= a.free_count:
+                got = a.alloc(arg)
+                assert NULL_PAGE not in got
+                assert not (set(got) & set(model)), "live page re-handed"
+                for p in got:
+                    model[p] = 1
+            else:
+                with pytest.raises(OutOfPages):
+                    a.alloc(arg)
+        elif model:
+            pages = sorted(model)
+            p = pages[arg % len(pages)]
+            if op == "incref":
+                a.incref([p])
+                model[p] += 1
+            else:
+                a.decref([p])
+                model[p] -= 1
+                if not model[p]:
+                    del model[p]
+        # allocator agrees with the model after every op
+        assert a.used_count == len(model)
+        assert a.free_count == (num_pages - 1) - len(model)
+        for p, rc in model.items():
+            assert a.refcount(p) == rc
+        a.check()
+
+
+@given(ops=OPS)
+@settings(max_examples=40, deadline=None)
+def test_freed_pages_are_reusable_and_only_when_unreferenced(ops):
+    """An aliased page (refcount >= 2) must survive any single decref and
+    must not reappear from alloc until fully released."""
+    a = PageAllocator(16)
+    held = []                                # pages with an extra alias
+    for op, arg in ops:
+        if op == "alloc" and a.free_count:
+            (p,) = a.alloc(1)
+            a.incref([p])                    # alias it immediately
+            held.append(p)
+        elif op == "decref" and held:
+            p = held[arg % len(held)]
+            a.decref([p])                    # drop ONE of two refs
+            assert a.refcount(p) == 1        # alias keeps it live
+            if a.free_count:
+                fresh = a.alloc(1)
+                assert p not in fresh        # never re-handed while held
+                a.decref(fresh)
+            a.decref([p])                    # now truly free
+            held.remove(p)
+        a.check()
+
+
+@given(st.lists(st.integers(1, 400), min_size=1, max_size=30))
+@settings(max_examples=40, deadline=None)
+def test_handles_are_pure_indices(lengths):
+    """PagedHandle equality/identity never touches device memory — the
+    prefix cache can hold thousands of them for free."""
+    hs = [PagedHandle(tuple(range(1, 1 + n % 7)), n) for n in lengths]
+    for h, n in zip(hs, lengths):
+        assert h.length == n
+        assert all(p != NULL_PAGE for p in h.pages)
