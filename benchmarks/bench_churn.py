@@ -12,7 +12,6 @@ the structural gap Fig 14 measures.  GC uses longer random-walk paths
 """
 from __future__ import annotations
 
-import math
 import random
 import time
 

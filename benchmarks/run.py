@@ -2,6 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV lines; JSON artifacts land in
 results/bench/.  BENCH_SCALE=0.2 shrinks trial counts for smoke runs.
+``python -m benchmarks.run quick`` runs each suite's reduced ``quick``
+mode instead (the CI artifact path); suites without one are skipped
+cleanly rather than crashing the run.
 """
 from __future__ import annotations
 
@@ -10,29 +13,34 @@ import time
 import traceback
 
 
-def main() -> None:
-    from benchmarks import (bench_anonymity, bench_cache_hit,
+def main(quick: bool = False) -> None:
+    from benchmarks import (bench_affinity, bench_anonymity, bench_cache_hit,
                             bench_churn, bench_clove_latency,
                             bench_confidentiality, bench_credit,
                             bench_kernels, bench_reputation,
                             bench_roofline, bench_serving_latency,
                             bench_throughput, bench_verification)
     suites = [
-        ("fig9_anonymity", bench_anonymity.main),
-        ("fig10_confidentiality", bench_confidentiality.main),
-        ("fig11_credit", bench_credit.main),
-        ("fig12_reputation", bench_reputation.main),
-        ("fig13_clove_latency", bench_clove_latency.main),
-        ("fig14_churn", bench_churn.main),
-        ("fig15_16_serving_latency", bench_serving_latency.main),
-        ("fig17_cache_hit", bench_cache_hit.main),
-        ("fig18_throughput", bench_throughput.main),
-        ("sec5.4_verification", bench_verification.main),
-        ("kernels", bench_kernels.main),
-        ("roofline", bench_roofline.main),
+        ("fig9_anonymity", bench_anonymity),
+        ("fig10_confidentiality", bench_confidentiality),
+        ("fig11_credit", bench_credit),
+        ("fig12_reputation", bench_reputation),
+        ("fig13_clove_latency", bench_clove_latency),
+        ("fig14_churn", bench_churn),
+        ("fig15_16_serving_latency", bench_serving_latency),
+        ("fig17_cache_hit", bench_cache_hit),
+        ("fig18_throughput", bench_throughput),
+        ("sec5.4_verification", bench_verification),
+        ("kernels", bench_kernels),
+        ("roofline", bench_roofline),
+        ("affinity_routing", bench_affinity),
     ]
     failures = []
-    for name, fn in suites:
+    for name, mod in suites:
+        fn = getattr(mod, "quick", None) if quick else getattr(mod, "main")
+        if fn is None:
+            print(f"# {name}: skipped (no quick mode)", flush=True)
+            continue
         t0 = time.time()
         try:
             fn()
@@ -46,4 +54,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    main(quick="quick" in sys.argv[1:])

@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""CI bench regression gate.
+
+Compares the quick-bench JSON artifacts in results/bench/ against the
+committed baselines in results/bench/baseline/ and fails (exit 1) when a
+gated metric drifts outside the tolerance (default ±30%, symmetric — a
+large improvement also fails so the baseline gets refreshed on purpose
+rather than ratcheting silently).
+
+Only machine-independent metrics are gated: token counts, dispatch
+counts, KV byte footprints, byte ratios.  Wall-clock throughputs live in
+the same artifacts for the per-PR trajectory but are never gated — CI
+runners are too noisy for a hard timing gate.
+
+Usage:
+    python scripts/check_bench.py                  # gate everything known
+    python scripts/check_bench.py --tol 0.3
+    python scripts/check_bench.py --update         # refresh the baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+# dotted-path metrics gated per artifact: deterministic counters only
+GATED = {
+    "fig18_throughput_quick.json": [
+        "continuous_batching.decode_calls",
+        "continuous_batching.batched_traces",
+        "paged_kv.bytes_ratio_paged_over_dense",
+        "paged_kv.paged.kv_pool_bytes",
+    ],
+    "bench_affinity_quick.json": [
+        "affinity.prefill_tokens",
+        "affinity.duplicate_prefill_tokens",
+        "affinity.prefill_dispatches",
+        "loadonly.duplicate_prefill_tokens",
+        "duplicate_kv_bytes_saved",
+    ],
+}
+
+
+def _dig(obj, path: str):
+    for part in path.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            raise KeyError(path)
+        obj = obj[part]
+    return obj
+
+
+def check_file(cur_path: Path, base_path: Path, keys: list,
+               tol: float) -> list:
+    """Returns a list of human-readable failure strings (empty = pass)."""
+    if not base_path.exists():
+        return [f"{base_path}: missing baseline (run with --update after "
+                f"regenerating the quick benches, and commit it)"]
+    cur = json.loads(cur_path.read_text())
+    base = json.loads(base_path.read_text())
+    fails = []
+    for key in keys:
+        try:
+            b = float(_dig(base, key))
+        except KeyError:
+            fails.append(f"{base_path.name}:{key}: not in baseline")
+            continue
+        try:
+            c = float(_dig(cur, key))
+        except KeyError:
+            fails.append(f"{cur_path.name}:{key}: missing from artifact")
+            continue
+        if b == 0:
+            ok = c == 0          # a zero baseline is an exact invariant
+        else:
+            ok = abs(c - b) <= tol * abs(b)
+        if not ok:
+            fails.append(f"{cur_path.name}:{key}: {c:g} vs baseline "
+                         f"{b:g} (tol ±{tol:.0%})")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results", default="results/bench", type=Path)
+    ap.add_argument("--baseline", default="results/bench/baseline",
+                    type=Path)
+    ap.add_argument("--tol", default=0.30, type=float)
+    ap.add_argument("--update", action="store_true",
+                    help="copy current artifacts over the baseline")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        args.baseline.mkdir(parents=True, exist_ok=True)
+        for name in GATED:
+            src = args.results / name
+            if src.exists():
+                shutil.copy(src, args.baseline / name)
+                print(f"baseline updated: {args.baseline / name}")
+        return 0
+
+    failures = []
+    for name, keys in GATED.items():
+        cur = args.results / name
+        if not cur.exists():
+            failures.append(f"{cur}: artifact missing (did the quick bench "
+                            f"run?)")
+            continue
+        failures += check_file(cur, args.baseline / name, keys, args.tol)
+    if failures:
+        print("bench regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    n = sum(len(k) for k in GATED.values())
+    print(f"bench regression gate passed ({n} metrics within "
+          f"±{args.tol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

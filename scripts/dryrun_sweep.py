@@ -46,7 +46,7 @@ def main():
             cmd.append("--force")
         t0 = time.time()
         try:
-            r = subprocess.run(cmd, capture_output=True, text=True,
+            subprocess.run(cmd, capture_output=True, text=True,
                                timeout=3000,
                                env={**os.environ, "PYTHONPATH": "src"})
             status = "?"

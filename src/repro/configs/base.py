@@ -9,8 +9,7 @@ allocation, weak-type-correct, shardable.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 import jax

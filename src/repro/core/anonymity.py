@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass
 
 
 def entropy_from_probs(probs) -> float:

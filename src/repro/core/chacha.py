@@ -8,7 +8,6 @@ message gives multi-MB/s throughput in pure numpy.
 from __future__ import annotations
 
 import os
-import struct
 
 import numpy as np
 

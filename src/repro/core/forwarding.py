@@ -1,15 +1,88 @@
-"""Overlay forwarding decision (Algorithm 2) + relative-load balancing.
+"""Overlay forwarding decision (Algorithm 2) + relative-load balancing
++ prefix-affinity routing over block-digest sketches.
 
-Executed by EVERY model node on receiving a user request: search the
-HR-tree; on a match, filter holders above the load threshold and pick the
-least (relatively) loaded; on a miss (or all holders overloaded), fall back
-to global least-relative-load.  Relative load = active requests / hardware
-score (1..10), per §3.3.
+Executed by EVERY model node on receiving a user request: check the
+peers' prefix sketches for the longest cached block-aligned prefix and
+route to its holder unless that holder is under memory or load pressure;
+otherwise search the HR-tree; on a match, filter holders above the load
+threshold and pick the least (relatively) loaded; on a miss (or all
+holders overloaded), fall back to global least-relative-load.  Relative
+load = active requests / hardware score (1..10), per §3.3.
+
+The sketch is a fixed-size bloom fingerprint over the chain digests that
+``serving/prefix_cache.py`` registers per BLOCK of every cached stream.
+It is finer-grained than the HR-tree (BLOCK=32 tokens vs the 64-token
+sync chunks) and per-peer rather than aggregated, so a sibling request
+whose prefix is cached on exactly one node routes there instead of
+re-prefilling the same KV bytes on a load-picked stranger.  False
+positives only cost a wasted co-location (the target re-prefills); they
+never affect correctness, and the prefix-scan containment test keeps the
+effective rate at fp^depth.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
+
+SKETCH_BYTES = 64              # bloom filter size (512 bits)
+SKETCH_HASHES = 4              # buckets per digest
+
+
+def _sketch_buckets(digest: bytes, m_bits: int = SKETCH_BYTES * 8,
+                    k: int = SKETCH_HASHES) -> list[int]:
+    """Bucket indices for one chain digest.  Digests are SHA-256 prefixes
+    (serving/prefix_cache._chain_hashes) — already uniform, so slicing
+    2-byte windows gives k independent buckets without re-hashing."""
+    return [int.from_bytes(digest[2 * i:2 * i + 2], "little") % m_bits
+            for i in range(k)]
+
+
+class PrefixSketch:
+    """Fixed-size bloom fingerprint over block-chain digests.
+
+    Built by a model node over its prefix cache's registered chain keys
+    (one per BLOCK depth of every cached stream) and broadcast in every
+    HR-tree sync; ``decide`` probes it with the request's own chain
+    digests to find the peer holding the longest cached prefix."""
+
+    __slots__ = ("bits",)
+
+    def __init__(self, bits: int = 0):
+        self.bits = bits
+
+    @classmethod
+    def build(cls, digests) -> "PrefixSketch":
+        s = cls()
+        for d in digests:
+            s.add(d)
+        return s
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "PrefixSketch":
+        return cls(int.from_bytes(data, "little"))
+
+    def to_bytes(self) -> bytes:
+        return self.bits.to_bytes(SKETCH_BYTES, "little")
+
+    def add(self, digest: bytes):
+        for b in _sketch_buckets(digest):
+            self.bits |= 1 << b
+
+    def __contains__(self, digest: bytes) -> bool:
+        return all(self.bits >> b & 1 for b in _sketch_buckets(digest))
+
+    def hit_depth(self, digests: Sequence[bytes]) -> int:
+        """Longest prefix of ``digests`` fully contained in the sketch.
+
+        Chain digests are cumulative, so a true cache entry registers
+        every shallower depth too — scanning forward and stopping at the
+        first miss compounds the bloom false-positive rate per block."""
+        d = 0
+        for dg in digests:
+            if dg not in self:
+                break
+            d += 1
+        return d
 
 
 @dataclass
@@ -23,10 +96,26 @@ class PeerInfo:
     # has no paged real engine.  Broadcast by model nodes so forwarding can
     # see memory pressure, not just slot occupancy.
     kv_pressure: float = 0.0
+    # serialized PrefixSketch (SKETCH_BYTES bloom over the peer's cached
+    # block-chain digests), refreshed by every hr_sync; None until the
+    # peer's first broadcast — affinity then simply skips it.
+    prefix_sketch: Optional[bytes] = None
+    _sketch_memo: object = None    # (bytes, PrefixSketch) decode cache
 
     @property
     def relative_load(self) -> float:
         return self.active_requests / max(self.hw_score, 1e-6)
+
+    def sketch(self) -> Optional[PrefixSketch]:
+        """Deserialized prefix sketch, memoized per broadcast payload —
+        decide() probes every peer on every request, but the sketch only
+        changes when an hr_sync replaces ``prefix_sketch``."""
+        raw = self.prefix_sketch
+        if not raw:
+            return None
+        if self._sketch_memo is None or self._sketch_memo[0] is not raw:
+            self._sketch_memo = (raw, PrefixSketch.from_bytes(raw))
+        return self._sketch_memo[1]
 
 
 @dataclass
@@ -34,12 +123,20 @@ class ForwardingConfig:
     tau_match: int = 2             # min HR-tree depth for a cache match
     load_threshold: float = 4.0    # max relative load for cache-affinity pick
     bits: int = 8
+    affinity: bool = True          # sketch-based prefix-affinity routing
+    affinity_min_blocks: int = 1   # min BLOCK-chain depth for an affinity pick
+    kv_pressure_max: float = 0.85  # veto affinity into a nearly-full arena
+    # affinity gets a TIGHTER load bound than the HR-tree holder pick:
+    # concentrating siblings is only a win while the holder has slack —
+    # past ~1 active request per hw point, queueing outweighs the saved
+    # prefill and the balancer must take over
+    affinity_load_max: float = 1.0
 
 
 @dataclass
 class Decision:
     target: object
-    reason: str                    # "cache_hit" | "load_balance" | "self"
+    reason: str            # "affinity" | "cache_hit" | "load_balance" | "self"
     depth: int = 0
     candidates: tuple = ()
 
@@ -51,11 +148,56 @@ def _tiebreak(node_id, tokens) -> int:
     return zlib.crc32(f"{node_id}|{list(tokens[:8])}".encode())
 
 
+def _sketch_affinity(cfg: ForwardingConfig, peers: dict, tokens
+                     ) -> tuple[Optional[PeerInfo], int, tuple]:
+    """Deepest eligible sketch hit across peers, or (None, 0, ()).
+
+    A peer is eligible when its sketch covers at least
+    ``affinity_min_blocks`` leading blocks of the request AND it is not
+    vetoed by memory pressure (``kv_pressure_max``) or relative load
+    (``affinity_load_max``) — affinity must never pile siblings onto a
+    node that would evict the very prefix they came for, or queue them
+    behind a backlog that costs more than the prefill they skip."""
+    if not any(p.prefix_sketch for p in peers.values()):
+        return None, 0, ()      # cold start / latency-only overlay: don't
+                                # pay the digest chain for nobody
+    # local import: prefix_cache imports nothing from core, so the digest
+    # function is reached lazily to keep this module stdlib-only at import
+    from repro.serving.prefix_cache import _chain_hashes
+    digests = _chain_hashes(tokens)
+    if not digests:
+        return None, 0, ()
+    hits = []
+    for p in peers.values():
+        sk = p.sketch()
+        if sk is None:
+            continue
+        d = sk.hit_depth(digests)
+        if d < cfg.affinity_min_blocks:
+            continue
+        if p.kv_pressure > cfg.kv_pressure_max:
+            continue
+        if p.relative_load > cfg.affinity_load_max:
+            continue
+        hits.append((d, p))
+    if not hits:
+        return None, 0, ()
+    best_d = max(d for d, _ in hits)
+    cands = [p for d, p in hits if d == best_d]
+    best = min(cands, key=lambda p: (p.relative_load, p.latency_ms,
+                                     _tiebreak(p.node_id, tokens)))
+    return best, best_d, tuple(p.node_id for p in cands)
+
+
 def decide(cfg: ForwardingConfig, hrtree, peers: dict, tokens,
            self_id=None) -> Decision:
     """peers: {node_id: PeerInfo} for the whole group (state sync view)."""
-    holders, depth = hrtree.search_tokens(tokens, cfg.tau_match)
     live = {nid: p for nid, p in peers.items()}
+    if cfg.affinity:
+        best, d_aff, cands = _sketch_affinity(cfg, live, tokens)
+        if best is not None:
+            return Decision(best.node_id, "affinity", d_aff, cands)
+    holders, depth = hrtree.search_tokens(tokens, cfg.tau_match)
     if holders:
         cands = [live[h] for h in holders if h in live]
         cands = [p for p in cands if p.relative_load <= cfg.load_threshold]

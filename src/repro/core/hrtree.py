@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Iterable, Optional, Sequence
+from typing import Iterable, Sequence
 
 # polynomial rolling hash over token ids (mirrored by kernels/chunk_hash)
 _HASH_MULT = 1_000_003

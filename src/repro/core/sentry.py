@@ -17,7 +17,7 @@ system prompts (cache affinity), per the paper.  Refreshed every
 from __future__ import annotations
 
 from collections import Counter
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Sequence
 
 

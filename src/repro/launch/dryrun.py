@@ -12,7 +12,6 @@ import traceback     # noqa: E402
 from pathlib import Path  # noqa: E402
 
 import jax           # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import base as cfgbase                    # noqa: E402
 from repro.distributed import collectives, hlo_analysis, sharding  # noqa: E402

@@ -9,7 +9,6 @@ from __future__ import annotations
 import argparse
 import json
 
-import numpy as np
 
 
 def main():

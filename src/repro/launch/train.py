@@ -15,11 +15,9 @@ import argparse
 import dataclasses
 import json
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import base as cfgbase
 from repro.models.lm import build_model

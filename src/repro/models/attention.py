@@ -274,20 +274,28 @@ def paged_decode_attention(cfg, q, k_arena, v_arena, page_table, pos,
 
 def paged_prefill_attention(cfg, q, k_arena, v_arena, page_table,
                             q_positions, window: Optional[int] = None,
-                            block_q: int = 512):
+                            block_q: int = 512, active=None):
     """Chunked-prefill attention over paged KV: the chunk's own K/V must
     already be scattered into the arena (update happens before attention,
     matching the decode path).  q: (B, C, nq, h); q_positions: (B, C).
     Causal masking over logical positions covers the not-yet-written tail
-    of the write page and unallocated table entries."""
+    of the write page and unallocated table entries.
+
+    ``active``: optional (B,) bool mask for batched-admission prefill —
+    rows whose divergence suffix ended in an earlier chunk step ride
+    along with zeroed output (their write already went to the scratch
+    page), so a shared chunk grid never recompiles per occupancy."""
     B = q.shape[0]
     blk = k_arena.shape[1]
     S = page_table.shape[1] * blk
     kd = gather_pages(k_arena, page_table)
     vd = gather_pages(v_arena, page_table)
     kv_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-    return full_attention(cfg, q, kd, vd, q_positions, kv_pos,
-                          causal=True, window=window, block_q=block_q)
+    o = full_attention(cfg, q, kd, vd, q_positions, kv_pos,
+                       causal=True, window=window, block_q=block_q)
+    if active is not None:
+        o = jnp.where(active[:, None, None, None], o, 0.0)
+    return o
 
 
 def attn_layer_forward(cfg, p, x, positions, window=None, causal=True,

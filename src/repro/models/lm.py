@@ -17,10 +17,6 @@ Caches are pytrees stacked over repeats (tuple over pattern positions):
 """
 from __future__ import annotations
 
-import functools
-import math
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -277,11 +273,16 @@ def layer_decode_paged(cfg, spec, p, x, pos, arena, page_table,
 
 
 def layer_prefill_paged(cfg, spec, p, x, pos0, arena, page_table,
-                        block_q=64):
+                        block_q=64, active=None):
     """One teacher-forced prefill chunk: scatter the chunk's K/V into its
     (freshly allocated) write pages, then attend over all pages.  x:
     (B, C, d) with C == BLOCK and ``pos0`` (B,) block-aligned, so the
-    chunk covers exactly logical block ``pos0 // BLOCK`` of every row."""
+    chunk covers exactly logical block ``pos0 // BLOCK`` of every row.
+
+    ``active``: optional (B,) bool mask (batched admission over a shared
+    chunk grid) — inactive rows scatter onto the scratch page 0 instead
+    of a live page, so short-suffix rows never corrupt the arena while
+    longer siblings still have chunks in flight."""
     B, C, _ = x.shape
     ka, va = arena["k"], arena["v"]
     blk = ka.shape[1]
@@ -290,11 +291,13 @@ def layer_prefill_paged(cfg, spec, p, x, pos0, arena, page_table,
     q, k, v = attention.project_qkv(cfg, p["mixer"], h, positions,
                                     rope=True)
     phys = page_table[jnp.arange(B), pos0 // blk]      # (B,)
+    if active is not None:
+        phys = jnp.where(active, phys, 0)              # dead rows -> scratch
     ka = ka.at[phys].set(k)
     va = va.at[phys].set(v)
     o = attention.paged_prefill_attention(cfg, q, ka, va, page_table,
                                           positions, window=spec.window,
-                                          block_q=block_q)
+                                          block_q=block_q, active=active)
     h = attention.out_proj(cfg, p["mixer"], o)
     if cfg.double_norm:
         h = common.apply_norm(cfg, p["norm1b"], h)
@@ -530,7 +533,8 @@ class LM:
                        cfg.d_head), cfg.compute_dtype)
         return tuple({"k": z, "v": z} for _ in cfg.pattern)
 
-    def prefill_paged(self, params, arena, page_tables, tokens, pos0):
+    def prefill_paged(self, params, arena, page_tables, tokens, pos0,
+                      active=None):
         """One teacher-forced chunk of prompt prefill over the paged pool.
 
         tokens: (B, C) with C == BLOCK; pos0: (B,) block-aligned chunk
@@ -538,7 +542,12 @@ class LM:
         returns logits for EVERY chunk position ((B, C, V) — the caller
         picks the last real token's row; pad tail K/V is overwritten by
         later writes before any mask exposes it), plus the updated arena.
-        """
+
+        ``active`` is an optional (B,) bool mask for batched admission:
+        all admitted requests' divergence suffixes march through ONE
+        shared chunk grid, rows whose suffix already ended are masked
+        (scratch-page writes, zeroed output) — K co-routed siblings cost
+        max(chunks) dispatches instead of sum(chunks)."""
         cfg = self.cfg
         B, C = tokens.shape
         positions = pos0[:, None] + jnp.arange(C)[None]
@@ -549,7 +558,8 @@ class LM:
             new = []
             for i, spec in enumerate(cfg.pattern):
                 x, a = layer_prefill_paged(cfg, spec, bp[i], x, pos0,
-                                           ar[i], page_tables)
+                                           ar[i], page_tables,
+                                           active=active)
                 new.append(a)
             return constraints.constrain_batch(x), tuple(new)
 

@@ -23,12 +23,30 @@ SCHEMA = {
     "hr_sync": ("from", "paths", "active", "hw"),
 }
 
+# optional fields, (name -> accepted types) per message type: absent on
+# older nodes, so validate() only type-checks them when present.  hr_sync
+# carries the serving-pressure + prefix-affinity state the forwarding
+# layer consumes:
+#   kv_usage     int    prefix-cache bytes in use
+#   kv_pressure  float  paged-arena fraction in use (0..1)
+#   sketch       bytes  core/forwarding.PrefixSketch over the node's
+#                       cached block-chain digests (SKETCH_BYTES bloom)
+OPTIONAL = {
+    "hr_sync": {"kv_usage": int, "kv_pressure": (int, float),
+                "sketch": (bytes, bytearray)},
+}
+
 
 def validate(msg: dict) -> bool:
     t = msg.get("type")
     if t not in SCHEMA:
         return False
-    return all(f in msg for f in SCHEMA[t])
+    if not all(f in msg for f in SCHEMA[t]):
+        return False
+    for f, typ in OPTIONAL.get(t, {}).items():
+        if f in msg and msg[f] is not None and not isinstance(msg[f], typ):
+            return False
+    return True
 
 
 def encode(msg: dict) -> bytes:

@@ -13,7 +13,7 @@ import heapq
 import itertools
 import random
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable
 
 
 @dataclass(order=True)

@@ -9,13 +9,14 @@ hash paths + load to the group.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import random
 from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core import ed25519, hrtree, sentry, sida
-from repro.core.forwarding import Decision, ForwardingConfig, PeerInfo, decide
+from repro.core.forwarding import ForwardingConfig, PeerInfo, decide
 from repro.overlay.user_node import _decode, _encode
 from repro.serving.engine import LatencyEngine, LatencyEngineConfig
 
@@ -67,7 +68,8 @@ class ModelNode:
         self._recent_prompts: list = []     # token streams for sync
         self.active_requests = 0
         self.metrics = {"served": 0, "forwarded_in": 0, "forwarded_out": 0,
-                        "cache_hits": 0, "ttft": [], "total": [],
+                        "cache_hits": 0, "affinity_hits": 0,
+                        "ttft": [], "total": [],
                         "cached_tokens": 0, "prompt_tokens": 0}
         self.respond_fn = None              # (tokens)->(out_tokens) override
 
@@ -96,6 +98,7 @@ class ModelNode:
             h = hrtree.preprocess(toks, self.lengths)
             if h:
                 paths.append(h)
+        sketch = self._prefix_sketch()
         msg = {"type": "hr_sync", "from": self.node_id,
                "paths": paths,
                "active": self.active_requests,
@@ -105,8 +108,12 @@ class ModelNode:
                # paged real engine: free-page pressure (fraction of the KV
                # arena in use) — a truer admission signal than slot count,
                # since memory, not rows, is what blocks admission
-               "kv_pressure": self._kv_pressure()}
-        size = 32 + sum(len(p) for p in paths)  # compact hash paths
+               "kv_pressure": self._kv_pressure(),
+               # block-digest bloom over the serving cache: peers route
+               # sibling requests to the deepest sketch hit (prefix
+               # affinity) instead of re-prefilling on a load-picked node
+               "sketch": sketch}
+        size = 32 + sum(len(p) for p in paths) + len(sketch)
         for m in self.group:
             if m != self.node_id:
                 net.send(self.node_id, m, msg, size_bytes=size)
@@ -115,6 +122,16 @@ class ModelNode:
         me = self.peers[self.node_id]
         me.active_requests = self.active_requests
         me.hw_score = self.hw_score
+        me.kv_pressure = self._kv_pressure()
+        me.prefix_sketch = sketch
+
+    def _prefix_sketch(self) -> bytes:
+        """Serialized PrefixSketch over the serving prefix cache.  A real
+        engine's cache is the physical truth (its pages are what admission
+        aliases); the latency model's cache mirrors served prompts."""
+        pc = (self.real_engine.prefix_cache if self.real_engine is not None
+              else self.engine.prefix_cache if self.engine else None)
+        return pc.sketch_bytes() if pc is not None else b""
 
     def _kv_pressure(self) -> float:
         """Fraction of the paged KV arena in use (0 when no paged real
@@ -132,6 +149,7 @@ class ModelNode:
         p.hw_score = msg["hw"]
         p.kv_usage = msg.get("kv_usage", 0)
         p.kv_pressure = msg.get("kv_pressure", 0.0)
+        p.prefix_sketch = msg.get("sketch") or None
         self.hrtree.merge_paths(msg["paths"], nid)
 
     # ------------------------------------------------------------------
@@ -172,14 +190,25 @@ class ModelNode:
         if self.behaviour == "drop":
             return
         if not forwarded and self.fwd_mode != "none":
-            tree = self.hrtree if self.fwd_mode == "full" else \
-                type(self.hrtree)(self.lengths)
-            d = decide(self.fwd_cfg, tree, self.peers, tokens,
+            if self.fwd_mode == "full":
+                tree, cfg = self.hrtree, self.fwd_cfg
+            else:   # lb_only ablation: no HR-tree AND no sketch affinity
+                tree = type(self.hrtree)(self.lengths)
+                cfg = dataclasses.replace(self.fwd_cfg, affinity=False)
+            d = decide(cfg, tree, self.peers, tokens,
                        self_id=self.node_id)
-            if d.reason == "cache_hit":
+            if d.reason in ("cache_hit", "affinity"):
                 self.metrics["cache_hits"] += 1
+            if d.reason == "affinity":
+                self.metrics["affinity_hits"] += 1
             if d.target is not None and d.target != self.node_id:
                 self.metrics["forwarded_out"] += 1
+                # optimistic load echo: count the in-flight forward against
+                # the target's stale sync view so back-to-back arrivals
+                # between sync ticks don't all herd onto the same peer
+                # (the next hr_sync overwrites this with ground truth)
+                if d.target in self.peers:
+                    self.peers[d.target].active_requests += 1
                 net.send(self.node_id, d.target,
                          {"type": "fwd_request", "payload": _encode(payload)},
                          size_bytes=len(tokens) * 2 + 128)

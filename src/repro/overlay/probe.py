@@ -1,0 +1,32 @@
+"""Minimal overlay endpoints for benches and tests.
+
+``ResponseSink`` stands in for the user's proxy path when driving model
+nodes directly on a SimNet: register it under a node id, point request
+payloads' ``reply`` route at it, and read recovered outputs by msg_id.
+Shared by benchmarks/bench_affinity.py and tests/test_affinity_serving.py
+so the response-clove decode and payload shape live in one place.
+"""
+from __future__ import annotations
+
+from repro.core import sida
+from repro.overlay.user_node import _decode
+
+
+class ResponseSink:
+    """Collects single-clove responses (n=1, k=1 S-IDA) by msg_id."""
+
+    def __init__(self):
+        self.got = {}
+
+    def on_message(self, net, src, msg):
+        payload = _decode(sida.recover([sida.Clove.decode(msg["clove"])]))
+        self.got[payload["msg_id"]] = payload["output"]
+
+
+def direct_payload(msg_id, toks, max_new: int = 4,
+                   sink_id="sink") -> dict:
+    """Request payload for ModelNode._process with replies routed to a
+    ``ResponseSink`` registered as ``sink_id`` (single reply path -> the
+    model node emits one k=1 clove straight to the sink)."""
+    return {"prompt": list(toks), "msg_id": msg_id, "session": None,
+            "max_new": max_new, "reply": [(sink_id, "00")]}

@@ -56,6 +56,13 @@ class UserNode:
         self._inbox: dict = {}            # msg_id -> PendingMsg
         self._msg_ids = itertools.count()
         self.sessions: dict = {}          # session -> model node id
+        # client-side prefix affinity: leading-block chain digest of a
+        # served prompt -> the model node that served it.  Re-sending a
+        # prompt that shares its first BLOCK goes straight to the likely
+        # prefix holder, saving the forward hop the group-side sketch
+        # routing would otherwise spend re-routing it.
+        self._prefix_servers: "dict[bytes, object]" = {}
+        self.prefix_affinity_cap = 64     # LRU bound on remembered digests
         self.on_response: Optional[Callable] = None
         self.stats = {"sent": 0, "recovered": 0, "failed": 0}
 
@@ -125,6 +132,8 @@ class UserNode:
             if session is not None and session in self.sessions:
                 model_id = self.sessions[session]   # session affinity
             else:
+                model_id = self._affinity_entry(prompt_tokens, llm)
+            if model_id is None:
                 cands = [r for r in self.model_list
                          if (not llm or r.llm == llm)]
                 model_id = self.rng.choice(cands).node_id
@@ -153,6 +162,28 @@ class UserNode:
                      size_bytes=len(c.frag) + 128)
         self.stats["sent"] += 1
         return msg_id
+
+    def _affinity_entry(self, tokens, llm: str):
+        """Entry node remembered for this prompt's leading block, if it is
+        still in the model list (None -> caller falls back to random)."""
+        dg = _leading_digest(tokens)
+        target = self._prefix_servers.get(dg) if dg else None
+        if target is None:
+            return None
+        if any(r.node_id == target and (not llm or r.llm == llm)
+               for r in self.model_list):
+            return target
+        self._prefix_servers.pop(dg, None)       # server left the overlay
+        return None
+
+    def _learn_prefix_server(self, payload: dict):
+        dg = _leading_digest(payload.get("prompt") or [])
+        if dg is None or payload.get("server") is None:
+            return
+        self._prefix_servers.pop(dg, None)       # refresh LRU position
+        self._prefix_servers[dg] = payload["server"]
+        while len(self._prefix_servers) > self.prefix_affinity_cap:
+            self._prefix_servers.pop(next(iter(self._prefix_servers)))
 
     def _pick_disjoint(self, paths: list, n: int) -> list:
         """Greedy relay-disjoint path selection: a single relay failure
@@ -267,8 +298,19 @@ class UserNode:
             self.stats["recovered"] += 1
             if payload.get("session"):
                 self.sessions[payload["session"]] = payload["server"]
+            self._learn_prefix_server(payload)
             if self.on_response:
                 self.on_response(net, payload)
+
+
+def _leading_digest(tokens):
+    """Chain digest of the first BLOCK of ``tokens`` (None if shorter) —
+    the key under which a user remembers which model node served a
+    prompt family.  Same digest function the serving caches index by;
+    only the first block is hashed, since deeper digests are unused."""
+    from repro.serving.prefix_cache import BLOCK, _chain_hashes
+    h = _chain_hashes(tokens[:BLOCK])
+    return h[0] if h else None
 
 
 def _route_next(user: "UserNode", path_id: bytes):

@@ -9,8 +9,8 @@ in the VerificationCommittee (core/consensus.py).
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Callable
 
 from repro.core import ed25519
 from repro.core.consensus import Challenge, SignedResponse

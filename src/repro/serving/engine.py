@@ -17,10 +17,8 @@ on the reduced config (see benchmarks/bench_serving_latency.py).
 """
 from __future__ import annotations
 
-import dataclasses
-import itertools
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import jax
@@ -81,6 +79,9 @@ class RealEngine:
         self.partial_reuse = all(s.mixer in ("attn", "cross_attn")
                                  for s in cfg.pattern)
         self.batched_traces = 0   # compilations of the slot-pool decode
+        self.batched_prefill_traces = 0   # compilations of batched admission
+        self.prefill_dispatches = 0       # jitted prefill_paged calls issued
+        self.prefill_tokens = 0           # real (non-pad) tokens prefilled
         # paged KV pool: pure-attention families only (recurrent mixers
         # have O(1) state — nothing to page)
         self.paged = (model.supports_paging() if paged is None
@@ -136,8 +137,16 @@ class RealEngine:
                 return model.decode_paged(params, arena, pt, tok, pos,
                                           active=active)
 
+            def _prefill_paged_batched(params, arena, pt, tok, pos0,
+                                       active):
+                self.batched_prefill_traces += 1   # trace-time only
+                return model.prefill_paged(params, arena, pt, tok, pos0,
+                                           active=active)
+
             self._prefill_paged = jax.jit(_prefill_paged,
                                           donate_argnums=donate)
+            self._prefill_paged_batched = jax.jit(_prefill_paged_batched,
+                                                  donate_argnums=donate)
             self._decode_paged = jax.jit(_decode_paged,
                                          donate_argnums=donate)
             self._query_paged = jax.jit(_query_paged)
@@ -235,6 +244,20 @@ class RealEngine:
                 jnp.asarray([pos - 1], jnp.int32))
         return PrefillState(cache, logits, pos, matched)
 
+    def _match_and_alias(self, toks: list) -> tuple[int, list]:
+        """Prefix-cache match + zero-copy alias of the hit's pages.
+
+        Returns (matched, pages): ``matched`` block-aligned tokens whose
+        KV the request reuses by reference (refcount bump — zero KV bytes
+        move), ``pages`` the aliased physical pages."""
+        matched, entry = self.prefix_cache.match(toks)
+        if (entry is not None and isinstance(entry.handle, PagedHandle)
+                and matched >= self.block):
+            shared = list(entry.handle.pages[:matched // self.block])
+            self.allocator.incref(shared)        # zero-copy alias
+            return matched, shared
+        return 0, []
+
     def _prefill_request_paged(self, req: Request) -> PrefillState:
         """Paged admission: alias cached pages, chunk-prefill the suffix.
 
@@ -244,16 +267,8 @@ class RealEngine:
         K/V into a fresh page and attends over the whole page table —
         admission cost is O(suffix), never O(cached prefix)."""
         toks = [int(t) for t in req.tokens]
-        blk = self.block
-        matched, entry = self.prefix_cache.match(toks)
-        pages: list = []
-        if (entry is not None and isinstance(entry.handle, PagedHandle)
-                and matched >= blk):
-            shared = list(entry.handle.pages[:matched // blk])
-            self.allocator.incref(shared)        # zero-copy alias
-            pages, pos = shared, matched
-        else:
-            matched, pos = 0, 0
+        matched, pages = self._match_and_alias(toks)
+        pos = matched
         logits_last = None
         try:
             pos, logits_last = self._prefill_chunks(toks, pages, pos)
@@ -262,14 +277,17 @@ class RealEngine:
                 self.allocator.decref(pages)
             raise
         if logits_last is None:
-            # block-aligned prompt fully cached: query-only replay of the
-            # last token — aliased pages are never written
-            pt = jnp.asarray(self.page_table_row(pages))
-            logits_last = self._query_paged(
-                self.params, self.arena, pt,
-                jnp.asarray([[toks[-1]]], jnp.int32),
-                jnp.asarray([pos - 1], jnp.int32))
+            logits_last = self._replay_last_token(toks, pages, pos)
         return PrefillState(None, logits_last, pos, matched, pages=pages)
+
+    def _replay_last_token(self, toks, pages, pos):
+        """Block-aligned prompt fully cached: query-only replay of the
+        last token — aliased pages are never written."""
+        pt = jnp.asarray(self.page_table_row(pages))
+        return self._query_paged(
+            self.params, self.arena, pt,
+            jnp.asarray([[toks[-1]]], jnp.int32),
+            jnp.asarray([pos - 1], jnp.int32))
 
     def _prefill_chunks(self, toks, pages, pos):
         blk = self.block
@@ -285,9 +303,83 @@ class RealEngine:
             logits, self.arena = self._prefill_paged(
                 self.params, self.arena, pt,
                 jnp.asarray([buf], jnp.int32), jnp.asarray([pos], jnp.int32))
+            self.prefill_dispatches += 1
+            self.prefill_tokens += len(chunk)
             logits_last = logits[:, len(chunk) - 1]
             pos += len(chunk)
         return pos, logits_last
+
+    # ------------------------------------------------------------------
+    # batched admission (paged): one dispatch stream for a whole round
+    # ------------------------------------------------------------------
+    def prefill_requests(self, reqs: list, batch: Optional[int] = None
+                         ) -> list:
+        """Batched paged admission: every request's divergence suffix
+        marches through ONE shared BLOCK-chunk grid.
+
+        Per chunk step there is a single ``prefill_paged`` dispatch over a
+        fixed ``batch``-row grid (per-row page tables, per-row block-
+        aligned start positions, masked tail rows for suffixes that ended
+        early), so K co-routed siblings cost ``max(chunks)`` dispatches
+        instead of ``sum(chunks)`` — the per-request admission loop the
+        sequential path still pays.  Prefix hits alias cached pages first
+        exactly like ``prefill_request``; rows whose prompt is fully
+        cached skip the grid and replay their last token query-only.
+
+        Returns one ``PrefillState`` per request, in input order."""
+        assert self.paged, "batched admission requires the paged pool"
+        if not reqs:
+            return []
+        B = batch or len(reqs)
+        assert len(reqs) <= B
+        blk = self.block
+        rows = []
+        try:
+            for req in reqs:
+                toks = [int(t) for t in req.tokens]
+                matched, pages = self._match_and_alias(toks)
+                rows.append({"toks": toks, "pages": pages, "pos": matched,
+                             "matched": matched, "logits": None})
+            n_steps = max((len(r["toks"]) - r["pos"] + blk - 1) // blk
+                          for r in rows)
+            for _ in range(n_steps):
+                tok = np.zeros((B, blk), np.int32)
+                pos0 = np.zeros((B,), np.int32)
+                act = np.zeros((B,), bool)
+                ptab = np.zeros((B, self.max_pages), np.int32)
+                ends = []                    # rows finishing this step
+                for i, r in enumerate(rows):
+                    if r["pos"] >= len(r["toks"]):
+                        continue             # suffix done: masked this step
+                    r["pages"].extend(self.alloc_pages(1))
+                    chunk = r["toks"][r["pos"]:r["pos"] + blk]
+                    tok[i, :len(chunk)] = chunk
+                    pos0[i] = r["pos"]
+                    act[i] = True
+                    ptab[i, :len(r["pages"])] = r["pages"]
+                    if r["pos"] + len(chunk) >= len(r["toks"]):
+                        ends.append((i, len(chunk)))
+                    r["pos"] += len(chunk)
+                    self.prefill_tokens += len(chunk)
+                logits, self.arena = self._prefill_paged_batched(
+                    self.params, self.arena, jnp.asarray(ptab),
+                    jnp.asarray(tok), jnp.asarray(pos0), jnp.asarray(act))
+                self.prefill_dispatches += 1
+                for i, off in ends:
+                    rows[i]["logits"] = logits[i:i + 1, off - 1]
+        except BaseException:
+            for r in rows:           # release aliased + fresh references
+                if r["pages"]:
+                    self.allocator.decref(r["pages"])
+            raise
+        out = []
+        for r in rows:
+            if r["logits"] is None:  # full block-aligned hit
+                r["logits"] = self._replay_last_token(
+                    r["toks"], r["pages"], r["pos"])
+            out.append(PrefillState(None, r["logits"], r["pos"],
+                                    r["matched"], pages=r["pages"]))
+        return out
 
     # ------------------------------------------------------------------
     # sequential generation

@@ -15,8 +15,8 @@ and never read unmasked.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Iterable, Sequence
+from dataclasses import dataclass
+from typing import Iterable
 
 NULL_PAGE = 0
 

@@ -146,7 +146,14 @@ class PrefixCache:
         self._drop(min(entries, key=lambda e: e.last_used))
         return True
 
-    # ---- HR-tree sync ----
+    # ---- HR-tree / sketch sync ----
+    def sketch_bytes(self) -> bytes:
+        """Serialized bloom fingerprint of this cache's chain digests
+        (core/forwarding.PrefixSketch), broadcast in every hr_sync so
+        peers can route sibling requests to the prefix holder."""
+        from repro.core.forwarding import PrefixSketch
+        return PrefixSketch.build(self._by_chain.keys()).to_bytes()
+
     def cached_prefixes(self) -> list[tuple]:
         """(token-length, entry) view used to build HR-tree broadcasts —
         callers keep the original token streams alongside handles.

@@ -10,9 +10,13 @@ engine's node-wide KV arena: admission installs the request's page list
 into a free row (a prefix-cache hit arrives as *aliased* pages — zero KV
 bytes copied), a fresh page is allocated only when a row's position
 crosses a block boundary, and completion registers the row's pages with
-``PrefixCache`` by reference and drops the request's refcount.  Dense
-engines (recurrent mixers) keep the PR-1 ``(R, max_active, ...)`` cache
-pool with scatter-on-admit / gather-on-finish.
+``PrefixCache`` by reference and drops the request's refcount.  Paged
+admission is itself **batched**: every round drains the queue into all
+free slots through one shared-grid ``prefill_paged`` dispatch stream
+(engine.prefill_requests) — K admitted requests cost max(chunks)
+dispatches, not K chunk loops.  Dense engines (recurrent mixers) keep
+the PR-1 ``(R, max_active, ...)`` cache pool with scatter-on-admit /
+gather-on-finish and per-request admission.
 
 Admission keeps session stickiness semantics and a longest-prefix-match
 preference (the node-local analogue of the HR-tree's group-level cache
@@ -124,12 +128,41 @@ class Scheduler:
                                  pages=st.pages or [])
         self.metrics["admitted"] += 1
 
+    def _admit_batch(self):
+        """Paged admission for a whole round: drain the queue into every
+        free slot through ONE batched ``prefill_paged`` dispatch stream
+        (engine.prefill_requests) — K admitted requests cost max(chunks)
+        dispatches on a shared grid instead of K separate chunk loops."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        picked = []
+        for slot in free:
+            if not self.queue:
+                break
+            picked.append((slot, self._pick_request()))
+        if not picked:
+            return
+        t0 = time.monotonic()
+        states = self.engine.prefill_requests(
+            [req for _, req in picked], batch=self.max_active)
+        ttft = time.monotonic() - t0
+        for (slot, req), st in zip(picked, states):
+            self._ptab[slot, :] = 0
+            self._ptab[slot, :len(st.pages)] = st.pages
+            self._logits = self._logits.at[slot].set(st.logits[0])
+            self.slots[slot] = _Slot(req, st.pos, t_start=t0, ttft=ttft,
+                                     cached_tokens=st.matched,
+                                     pages=st.pages or [])
+            self.metrics["admitted"] += 1
+
     # ------------------------------------------------------------------
     def step(self):
         """One continuous-batching round: admit into free slots, then ONE
         batched decode dispatch for every still-active slot."""
-        while self.queue and any(s is None for s in self.slots):
-            self._admit_one()
+        if self.engine.paged:
+            self._admit_batch()
+        else:
+            while self.queue and any(s is None for s in self.slots):
+                self._admit_one()
         active_ix = [i for i, s in enumerate(self.slots) if s is not None]
         if not active_ix:
             return

@@ -14,7 +14,6 @@ re-mesh, training/fault_tolerance.py).
 """
 from __future__ import annotations
 
-import json
 import os
 import shutil
 from pathlib import Path

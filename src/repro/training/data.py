@@ -15,8 +15,6 @@ Serving workloads (dataset stand-ins, see DESIGN.md substitutions):
 """
 from __future__ import annotations
 
-import dataclasses
-import math
 from dataclasses import dataclass
 from typing import Iterator, Optional
 

@@ -16,8 +16,6 @@ so every policy is unit-testable on one CPU:
 """
 from __future__ import annotations
 
-import math
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 

@@ -6,7 +6,6 @@ same PartitionSpecs as the corresponding parameters.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

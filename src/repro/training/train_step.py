@@ -2,7 +2,6 @@
 microbatch gradient accumulation and int8 gradient compression hooks."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -76,7 +76,6 @@ def test_shamir_any_k_of_n(secret, k, extra):
 
 def test_shamir_below_threshold_no_info():
     secret = b"\x00" * 32
-    shares = shamir.split(secret, 5, 3)
     # 2 shares: reconstructing with a wrong 3rd share gives garbage, and
     # the 2 shares alone are uniformly distributed (can't equal secret
     # deterministically) — statistical smoke check over trials

@@ -1,11 +1,19 @@
 """HR-tree, Sentry, and forwarding-logic tests (+ hypothesis invariants)."""
 import random
 
-from hypothesis import given, settings, strategies as st
+# hypothesis-optional: only the property test below needs it — the
+# deterministic HR-tree / sentry / decide() coverage must still run on a
+# bare interpreter (tests/conftest.py collects this module either way)
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import hrtree, sentry
-from repro.core.forwarding import (Decision, ForwardingConfig, PeerInfo,
-                                   decide)
+from repro.core.forwarding import (ForwardingConfig, PeerInfo,
+                                   PrefixSketch, decide)
+from repro.serving.prefix_cache import _chain_hashes
 
 
 def make_tree(lengths=(32,), default_chunk=16):
@@ -61,18 +69,19 @@ def test_false_positive_rate_math():
     assert t.false_positive_rate(3) == (1 / 256) ** 3
 
 
-@given(st.lists(st.integers(0, 1000), min_size=16, max_size=200),
-       st.integers(0, 3))
-@settings(max_examples=30, deadline=None)
-def test_hrtree_inserted_always_found(tokens, tau):
-    t = make_tree()
-    t.insert_tokens(tokens, "X")
-    n_hashes = len(hrtree.preprocess(tokens, t.lengths, t.bits,
-                                     t.default_chunk))
-    holders, d = t.search_tokens(tokens, tau=tau)
-    assert d == n_hashes
-    if d >= tau:
-        assert "X" in holders
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.integers(0, 1000), min_size=16, max_size=200),
+           st.integers(0, 3))
+    @settings(max_examples=30, deadline=None)
+    def test_hrtree_inserted_always_found(tokens, tau):
+        t = make_tree()
+        t.insert_tokens(tokens, "X")
+        n_hashes = len(hrtree.preprocess(tokens, t.lengths, t.bits,
+                                         t.default_chunk))
+        holders, d = t.search_tokens(tokens, tau=tau)
+        assert d == n_hashes
+        if d >= tau:
+            assert "X" in holders
 
 
 # ---------------------------------------------------------------- Sentry
@@ -132,3 +141,109 @@ def test_forward_tiebreak_spreads():
     targets = {decide(ForwardingConfig(), t, peers,
                       [seed] * 40).target for seed in range(40)}
     assert len(targets) >= 3
+
+
+# --------------------------------------------------- prefix-affinity sketch
+def _sketch_of(tokens) -> bytes:
+    """What a node caching ``tokens`` broadcasts: a bloom over the chain
+    digest of every block depth (prefix_cache registers all of them)."""
+    return PrefixSketch.build(_chain_hashes(tokens)).to_bytes()
+
+
+def test_sketch_roundtrip_and_hit_depth():
+    toks = list(range(96))                        # 3 blocks
+    digests = _chain_hashes(toks)
+    sk = PrefixSketch.from_bytes(_sketch_of(toks))
+    assert sk.hit_depth(digests) == 3
+    # a stream sharing only the first 2 blocks matches at depth 2
+    sibling = toks[:64] + [999] * 32
+    assert sk.hit_depth(_chain_hashes(sibling)) == 2
+    # an unrelated stream misses at depth 0 (no false positive here)
+    assert sk.hit_depth(_chain_hashes([5000 + i for i in range(96)])) == 0
+
+
+def test_affinity_routes_to_deepest_sketch_hit():
+    toks = list(range(96)) + [7] * 8
+    t = make_tree()                               # HR-tree knows nothing
+    peers = {"A": PeerInfo("A", 5, 1, prefix_sketch=_sketch_of(toks[:32])),
+             "B": PeerInfo("B", 5, 0, prefix_sketch=_sketch_of(toks[:96])),
+             "C": PeerInfo("C", 5, 0)}            # no sketch yet
+    d = decide(ForwardingConfig(), t, peers, toks)
+    assert d.reason == "affinity" and d.target == "B" and d.depth == 3
+
+
+def test_affinity_miss_falls_back_to_load_routing():
+    """A sketch that only covers OTHER prompts (the false-positive probe:
+    every peer broadcasts a sketch, none contains this prefix) must leave
+    the decision exactly where the load-only path would put it."""
+    toks = [9] * 64
+    t = make_tree()
+    sk_other = _sketch_of(list(range(2000, 2096)))
+    peers = {"A": PeerInfo("A", 5, 3, prefix_sketch=sk_other),
+             "B": PeerInfo("B", 5, 0, prefix_sketch=sk_other)}
+    d = decide(ForwardingConfig(), t, peers, toks)
+    ref = decide(ForwardingConfig(affinity=False), t, peers, toks)
+    assert d.reason == "load_balance"
+    assert (d.target, d.reason) == (ref.target, ref.reason)
+
+
+def test_affinity_saturated_sketch_vetoed_by_load():
+    """Worst-case bloom false positive — a saturated sketch 'hits' every
+    prefix — must still be subject to the load veto: an overloaded
+    claimant never captures traffic on sketch evidence alone."""
+    toks = list(range(64))
+    t = make_tree()
+    saturated = b"\xff" * len(_sketch_of(toks))
+    peers = {"A": PeerInfo("A", 5, 100, prefix_sketch=saturated),
+             "B": PeerInfo("B", 5, 1)}
+    d = decide(ForwardingConfig(load_threshold=4.0), t, peers, toks)
+    assert d.reason == "load_balance" and d.target == "B"
+
+
+def test_kv_pressure_vetoes_affinity_hit():
+    """A true sketch hit on a node whose paged arena is nearly full must
+    fall back — co-routing a sibling there would evict the very prefix
+    it came for."""
+    toks = list(range(64)) + [3] * 8
+    t = make_tree()
+    holder = PeerInfo("A", 5, 0, prefix_sketch=_sketch_of(toks[:64]),
+                      kv_pressure=0.95)
+    other = PeerInfo("B", 5, 0)
+    cfg = ForwardingConfig(kv_pressure_max=0.85)
+    d = decide(cfg, t, {"A": holder, "B": other}, toks)
+    assert d.reason == "load_balance" and d.target == "B"
+    # drop the pressure below the threshold: the hit is honored again
+    holder.kv_pressure = 0.5
+    d = decide(cfg, t, {"A": holder, "B": other}, toks)
+    assert d.reason == "affinity" and d.target == "A"
+
+
+def test_decide_deterministic_across_peer_orderings():
+    """The same peer state must yield the same target regardless of dict
+    insertion order — min() over an order-dependent iteration would
+    otherwise flap between equal-load peers."""
+    toks = list(range(64))
+    sk = _sketch_of(toks)
+    t = make_tree()
+
+    def mk(order):
+        peers = {}
+        for nid in order:
+            peers[nid] = PeerInfo(nid, 5, 0, prefix_sketch=sk)
+        return peers
+
+    cfg = ForwardingConfig()
+    for seed in range(20):
+        q = [seed] * 48
+        fwd = decide(cfg, t, mk(["A", "B", "C"]), q)
+        rev = decide(cfg, t, mk(["C", "B", "A"]), q)
+        assert (fwd.target, fwd.reason) == (rev.target, rev.reason)
+
+
+def test_affinity_disabled_preserves_legacy_paths():
+    toks = list(range(128))
+    t = _tree_with("A", toks)
+    peers = {"A": PeerInfo("A", 5, 3, prefix_sketch=_sketch_of(toks)),
+             "B": PeerInfo("B", 5, 0)}
+    d = decide(ForwardingConfig(affinity=False), t, peers, toks)
+    assert d.reason == "cache_hit" and d.target == "A"

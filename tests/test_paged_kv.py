@@ -8,7 +8,6 @@ tests/test_page_pool_props.py.
 import random
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

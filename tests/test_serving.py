@@ -1,7 +1,5 @@
 """Serving engine + prefix cache tests."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

@@ -2,7 +2,7 @@
 architecture with rank-correct, divisibility-safe PartitionSpecs."""
 import jax
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import AbstractMesh
 
 from repro.configs import base
 from repro.distributed import sharding

@@ -1,7 +1,6 @@
 """SimNet semantics + HLO analyzer correctness (trip-count scaling)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.distributed import hlo_analysis
 from repro.net.simnet import SimNet
