@@ -5,9 +5,8 @@ from __future__ import annotations
 import random
 import time
 
-from repro.core import anonymity
-
 from benchmarks.common import SCALE, emit, save
+from repro.core import anonymity
 
 
 def main():

@@ -7,10 +7,9 @@ import time
 
 import numpy as np
 
+from benchmarks.common import SCALE, emit, save
 from repro.core import sida
 from repro.training.data import TOOLUSE, WorkloadGen
-
-from benchmarks.common import SCALE, emit, save
 
 
 def main():

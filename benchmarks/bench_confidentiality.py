@@ -5,9 +5,8 @@ from __future__ import annotations
 import random
 import time
 
-from repro.core.anonymity import confidentiality
-
 from benchmarks.common import SCALE, emit, save
+from repro.core.anonymity import confidentiality
 
 
 def main():

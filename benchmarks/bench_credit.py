@@ -6,10 +6,9 @@ import time
 
 import numpy as np
 
-from repro.core.verification import VerifierModel, credibility
-
 from benchmarks.common import SCALE, emit, save
 from benchmarks.gt_model import greedy, impostors, trained_gt
+from repro.core.verification import VerifierModel, credibility
 
 
 def main():

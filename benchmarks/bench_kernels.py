@@ -9,12 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import emit, timeit
 from repro.core import hrtree
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.serving.prefix_cache import PrefixCache
-
-from benchmarks.common import emit, timeit
 
 
 def main():

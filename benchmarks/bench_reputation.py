@@ -6,11 +6,10 @@ import time
 
 import numpy as np
 
-from repro.core.reputation import ReputationConfig, ReputationTracker
-from repro.core.verification import VerifierModel, credibility
-
 from benchmarks.common import SCALE, emit, save
 from benchmarks.gt_model import greedy, impostors, trained_gt
+from repro.core.reputation import ReputationConfig, ReputationTracker
+from repro.core.verification import VerifierModel, credibility
 
 
 def main():

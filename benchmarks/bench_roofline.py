@@ -7,10 +7,9 @@ import glob
 import json
 from pathlib import Path
 
+from benchmarks.common import emit, save
 from repro.configs import base as cfgbase
 from repro.distributed.collectives import roofline_terms
-
-from benchmarks.common import emit, save
 
 
 def model_flops(rec: dict) -> float:

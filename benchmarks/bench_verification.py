@@ -10,10 +10,9 @@ import time
 
 import numpy as np
 
-from repro.core.verification import VerifierModel, credibility
-
 from benchmarks.common import SCALE, emit, save
 from benchmarks.gt_model import greedy, trained_gt
+from repro.core.verification import VerifierModel, credibility
 
 
 def main():

@@ -19,7 +19,8 @@ def main(quick: bool = False) -> None:
                             bench_confidentiality, bench_credit,
                             bench_kernels, bench_reputation,
                             bench_roofline, bench_serving_latency,
-                            bench_throughput, bench_verification)
+                            bench_spec, bench_throughput,
+                            bench_verification)
     suites = [
         ("fig9_anonymity", bench_anonymity),
         ("fig10_confidentiality", bench_confidentiality),
@@ -34,6 +35,7 @@ def main(quick: bool = False) -> None:
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),
         ("affinity_routing", bench_affinity),
+        ("spec_decode", bench_spec),
     ]
     failures = []
     for name, mod in suites:

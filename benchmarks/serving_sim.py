@@ -15,7 +15,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.overlay.network import OverlayConfig, build_overlay
-from repro.training.data import (LONGQA, TOOLUSE, CODING, MixedWorkload,
+from repro.training.data import (CODING, LONGQA, TOOLUSE, MixedWorkload,
                                  WorkloadGen, poisson_arrivals)
 
 WORKLOADS = {

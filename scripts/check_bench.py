@@ -12,15 +12,27 @@ counts, KV byte footprints, byte ratios.  Wall-clock throughputs live in
 the same artifacts for the per-PR trajectory but are never gated — CI
 runners are too noisy for a hard timing gate.
 
+A ``*_quick.json`` artifact that is not registered in ``GATED`` is a
+hard failure, not a skip: a new quick bench must name its deterministic
+counters here and commit a baseline (``--update``), otherwise its
+regressions would ride through CI unseen.
+
+``--summary`` additionally writes a per-run markdown table (gated
+counters plus ungated throughput/accept-rate highlights, current vs
+baseline) to ``$GITHUB_STEP_SUMMARY`` — or stdout when unset — so a
+regression is readable from the workflow page without downloading
+artifacts.
+
 Usage:
     python scripts/check_bench.py                  # gate everything known
-    python scripts/check_bench.py --tol 0.3
+    python scripts/check_bench.py --tol 0.3 --summary
     python scripts/check_bench.py --update         # refresh the baseline
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import shutil
 import sys
 from pathlib import Path
@@ -40,7 +52,36 @@ GATED = {
         "loadonly.duplicate_prefill_tokens",
         "duplicate_kv_bytes_saved",
     ],
+    "bench_spec_quick.json": [
+        "repetitive.spec.decode_dispatches",
+        "repetitive.spec.dispatches_per_token",
+        "repetitive.spec.accepted_tokens",
+        "repetitive.spec.kv_bytes_live",
+        "repetitive.baseline.decode_dispatches",
+        "random.spec.dispatches_per_token",
+    ],
 }
+
+# ungated per-artifact highlights for the --summary table (wall-clock
+# throughputs, ratios, accept rates — trajectory, never a gate)
+SUMMARY_EXTRA = {
+    "fig18_throughput_quick.json": [
+        "continuous_batching.batched_tok_s",
+        "continuous_batching.speedup",
+    ],
+    "bench_affinity_quick.json": [
+        "affinity.tok_s",
+        "tok_s_ratio",
+    ],
+    "bench_spec_quick.json": [
+        "repetitive.spec.tok_s",
+        "repetitive.spec.accept_rate",
+        "repetitive.dispatch_ratio",
+    ],
+}
+
+UPDATE_HINT = ("regenerate the quick benches, run scripts/check_bench.py "
+               "--update, and commit the refreshed baseline")
 
 
 def _dig(obj, path: str):
@@ -52,33 +93,74 @@ def _dig(obj, path: str):
 
 
 def check_file(cur_path: Path, base_path: Path, keys: list,
-               tol: float) -> list:
-    """Returns a list of human-readable failure strings (empty = pass)."""
+               tol: float) -> tuple[list, list]:
+    """Gate one artifact.  Returns (failures, summary rows); each row is
+    (artifact, metric, current, baseline, gated, ok)."""
     if not base_path.exists():
-        return [f"{base_path}: missing baseline (run with --update after "
-                f"regenerating the quick benches, and commit it)"]
+        return [f"{base_path}: missing baseline ({UPDATE_HINT})"], []
     cur = json.loads(cur_path.read_text())
     base = json.loads(base_path.read_text())
+    fails, rows = [], []
+    for gated, key_list in ((True, keys),
+                            (False, SUMMARY_EXTRA.get(cur_path.name, []))):
+        for key in key_list:
+            try:
+                b = float(_dig(base, key))
+            except KeyError:
+                if gated:
+                    fails.append(f"{base_path.name}:{key}: not in baseline")
+                continue
+            try:
+                c = float(_dig(cur, key))
+            except KeyError:
+                if gated:
+                    fails.append(f"{cur_path.name}:{key}: missing from "
+                                 f"artifact")
+                continue
+            if b == 0:
+                ok = c == 0          # a zero baseline is an exact invariant
+            else:
+                ok = abs(c - b) <= tol * abs(b)
+            rows.append((cur_path.name, key, c, b, gated, ok or not gated))
+            if gated and not ok:
+                fails.append(f"{cur_path.name}:{key}: {c:g} vs baseline "
+                             f"{b:g} (tol ±{tol:.0%})")
+    return fails, rows
+
+
+def unknown_artifacts(results: Path) -> list:
+    """Quick-bench artifacts with no GATED registration: hard failures —
+    an unregistered bench would otherwise regress silently."""
     fails = []
-    for key in keys:
-        try:
-            b = float(_dig(base, key))
-        except KeyError:
-            fails.append(f"{base_path.name}:{key}: not in baseline")
-            continue
-        try:
-            c = float(_dig(cur, key))
-        except KeyError:
-            fails.append(f"{cur_path.name}:{key}: missing from artifact")
-            continue
-        if b == 0:
-            ok = c == 0          # a zero baseline is an exact invariant
-        else:
-            ok = abs(c - b) <= tol * abs(b)
-        if not ok:
-            fails.append(f"{cur_path.name}:{key}: {c:g} vs baseline "
-                         f"{b:g} (tol ±{tol:.0%})")
+    for p in sorted(results.glob("*_quick.json")):
+        if p.name not in GATED:
+            fails.append(f"{p}: unknown quick-bench artifact — register "
+                         f"its deterministic counters in check_bench."
+                         f"GATED, then {UPDATE_HINT}")
     return fails
+
+
+def write_summary(rows: list, failures: list, tol: float):
+    """Markdown table for $GITHUB_STEP_SUMMARY (stdout when unset)."""
+    lines = ["## Quick-bench summary", "",
+             f"{len(failures)} gate failure(s), tolerance ±{tol:.0%} "
+             f"(gated metrics only)", "",
+             "| artifact | metric | current | baseline | Δ | gated | ok |",
+             "|---|---|---:|---:|---:|:---:|:---:|"]
+    for art, key, c, b, gated, ok in rows:
+        delta = f"{(c - b) / b:+.1%}" if b else ("0%" if c == b else "n/a")
+        lines.append(f"| {art} | {key} | {c:g} | {b:g} | {delta} "
+                     f"| {'yes' if gated else '—'} "
+                     f"| {'✅' if ok else '❌'} |")
+    for f in failures:
+        lines.append(f"- ❌ `{f}`")
+    text = "\n".join(lines) + "\n"
+    dest = os.environ.get("GITHUB_STEP_SUMMARY")
+    if dest:
+        with open(dest, "a") as fh:
+            fh.write(text)
+    else:
+        print(text)
 
 
 def main(argv=None) -> int:
@@ -88,26 +170,35 @@ def main(argv=None) -> int:
                     type=Path)
     ap.add_argument("--tol", default=0.30, type=float)
     ap.add_argument("--update", action="store_true",
-                    help="copy current artifacts over the baseline")
+                    help="copy current quick artifacts over the baseline")
+    ap.add_argument("--summary", action="store_true",
+                    help="write a markdown comparison table to "
+                         "$GITHUB_STEP_SUMMARY (stdout when unset)")
     args = ap.parse_args(argv)
 
     if args.update:
         args.baseline.mkdir(parents=True, exist_ok=True)
-        for name in GATED:
-            src = args.results / name
-            if src.exists():
-                shutil.copy(src, args.baseline / name)
-                print(f"baseline updated: {args.baseline / name}")
+        # every quick artifact, registered or not: an unknown one still
+        # needs its baseline committed alongside its GATED registration
+        for src in sorted(args.results.glob("*_quick.json")):
+            shutil.copy(src, args.baseline / src.name)
+            print(f"baseline updated: {args.baseline / src.name}")
         return 0
 
-    failures = []
+    failures, rows = [], []
     for name, keys in GATED.items():
         cur = args.results / name
         if not cur.exists():
             failures.append(f"{cur}: artifact missing (did the quick bench "
                             f"run?)")
             continue
-        failures += check_file(cur, args.baseline / name, keys, args.tol)
+        fails, file_rows = check_file(cur, args.baseline / name, keys,
+                                      args.tol)
+        failures += fails
+        rows += file_rows
+    failures += unknown_artifacts(args.results)
+    if args.summary:
+        write_summary(rows, failures, args.tol)
     if failures:
         print("bench regression gate FAILED:", file=sys.stderr)
         for f in failures:

@@ -1,7 +1,8 @@
 import sys
-import numpy as np
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import base
 from repro.models.lm import build_model, lm_loss

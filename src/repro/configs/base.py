@@ -118,6 +118,14 @@ class ArchConfig:
     # kernels (TPU only; dry-run lowers the jnp reference path)
     use_kernels: bool = False
 
+    # speculative decode (serving-time policy, not an architecture trait:
+    # no effect on params/init).  With ``spec_enabled`` a paged scheduler
+    # verifies up to ``spec_k`` self-drafted n-gram tokens per slot per
+    # round in one multi-token dispatch (models/lm.verify_paged); outputs
+    # stay token-identical to greedy non-speculative decoding.
+    spec_enabled: bool = False
+    spec_k: int = 4
+
     source: str = ""              # provenance note from the assignment brief
 
     # ---- derived ---------------------------------------------------------
@@ -225,7 +233,8 @@ class ArchConfig:
             a = p
             if spec.ffn == "dense" and self.d_ff:
                 ff = (3 if self.glu else 2) * d * self.d_ff
-                p += ff; a += ff
+                p += ff
+                a += ff
             elif spec.ffn == "moe":
                 m = self.moe
                 per_e = 3 * d * m.d_ff_expert
@@ -239,7 +248,8 @@ class ArchConfig:
         if self.is_encdec:
             enc = self.n_enc_layers * (d * nq * dh * 2 + 2 * d * nkv * dh +
                                        (3 if self.glu else 2) * d * self.d_ff)
-            total += enc; active += enc
+            total += enc
+            active += enc
         return {"total": total, "active": active}
 
 

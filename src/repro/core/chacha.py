@@ -19,10 +19,18 @@ def _rotl(v, n):
 
 
 def _quarter(s, a, b, c, d):
-    s[a] += s[b]; s[d] ^= s[a]; s[d] = _rotl(s[d], 16)
-    s[c] += s[d]; s[b] ^= s[c]; s[b] = _rotl(s[b], 12)
-    s[a] += s[b]; s[d] ^= s[a]; s[d] = _rotl(s[d], 8)
-    s[c] += s[d]; s[b] ^= s[c]; s[b] = _rotl(s[b], 7)
+    s[a] += s[b]
+    s[d] ^= s[a]
+    s[d] = _rotl(s[d], 16)
+    s[c] += s[d]
+    s[b] ^= s[c]
+    s[b] = _rotl(s[b], 12)
+    s[a] += s[b]
+    s[d] ^= s[a]
+    s[d] = _rotl(s[d], 8)
+    s[c] += s[d]
+    s[b] ^= s[c]
+    s[b] = _rotl(s[b], 7)
 
 
 def keystream(key: bytes, nonce: bytes, nblocks: int,

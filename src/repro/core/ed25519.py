@@ -12,7 +12,7 @@ import os
 P = 2 ** 255 - 19
 L = 2 ** 252 + 27742317777372353535851937790883648493
 D = (-121665 * pow(121666, P - 2, P)) % P
-I = pow(2, (P - 1) // 4, P)
+SQRT_M1 = pow(2, (P - 1) // 4, P)
 
 _BX = None
 _BY = 4 * pow(5, P - 2, P) % P
@@ -22,7 +22,7 @@ def _recover_x(y, sign):
     xx = (y * y - 1) * pow(D * y * y + 1, P - 2, P)
     x = pow(xx, (P + 3) // 8, P)
     if (x * x - xx) % P != 0:
-        x = x * I % P
+        x = x * SQRT_M1 % P
     if (x * x - xx) % P != 0:
         raise ValueError("invalid point")
     if x % 2 != sign:

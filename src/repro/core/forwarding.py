@@ -96,6 +96,11 @@ class PeerInfo:
     # has no paged real engine.  Broadcast by model nodes so forwarding can
     # see memory pressure, not just slot occupancy.
     kv_pressure: float = 0.0
+    # fraction of speculative draft tokens the peer's engine accepted
+    # (0..1; 0 until it drafts).  Broadcast alongside kv_pressure — an
+    # accept-rate-aware router can prefer peers whose verify rounds commit
+    # multiple tokens per dispatch (reported only for now; see ROADMAP).
+    spec_accept_rate: float = 0.0
     # serialized PrefixSketch (SKETCH_BYTES bloom over the peer's cached
     # block-chain digests), refreshed by every hr_sync; None until the
     # peer's first broadcast — affinity then simply skips it.

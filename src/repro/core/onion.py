@@ -83,7 +83,8 @@ def peel_establishment(blob: bytes, dh_sk: bytes):
     inner = _unbox(blob, dh_sk)
     path_id, lp, ls = struct.unpack("<16sHH", inner[:20])
     off = 20
-    pred = _decode_id(inner[off:off + lp]); off += lp
+    pred = _decode_id(inner[off:off + lp])
+    off += lp
     succ = _decode_id(inner[off:off + ls]) if ls else None
     off += ls
     rest = inner[off:]

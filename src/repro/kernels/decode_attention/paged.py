@@ -47,11 +47,11 @@ def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
     s = jnp.where(mask, s, NEG_INF)
     m = s.max()
     p = jnp.exp(s - m)
-    l = p.sum()
+    lsum = p.sum()
     acc = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))  # (1, D)
     o_ref[0, 0] = acc.astype(o_ref.dtype)
     m_ref[0, 0, 0] = m
-    l_ref[0, 0, 0] = l
+    l_ref[0, 0, 0] = lsum
 
 
 def paged_decode_attention_pallas(q, k_arena, v_arena, page_table, lengths,

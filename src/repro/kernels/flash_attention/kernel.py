@@ -25,14 +25,14 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
     q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
     D = q.shape[-1]
     m = jnp.full((bq,), NEG_INF, jnp.float32)
-    l = jnp.zeros((bq,), jnp.float32)
+    lsum = jnp.zeros((bq,), jnp.float32)
     acc = jnp.zeros((bq, D), jnp.float32)
     q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
 
     nk = seq_kv // bk
 
     def body(j, carry):
-        m, l, acc = carry
+        m, lsum, acc = carry
         k = k_ref[0, 0, pl.dslice(j * bk, bk), :].astype(jnp.float32)
         v = v_ref[0, 0, pl.dslice(j * bk, bk), :].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
@@ -48,7 +48,7 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
         m_new = jnp.maximum(m, s.max(axis=1))
         p = jnp.exp(s - m_new[:, None])
         alpha = jnp.exp(m - m_new)
-        l_new = l * alpha + p.sum(axis=1)
+        l_new = lsum * alpha + p.sum(axis=1)
         acc_new = acc * alpha[:, None] + jax.lax.dot_general(
             p.astype(v.dtype), v, (((1,), (0,)), ((), ()))).astype(jnp.float32)
         return m_new, l_new, acc_new
@@ -58,8 +58,8 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
         nk_eff = jnp.minimum(nk, ((iq + 1) * bq + bk - 1) // bk)
     else:
         nk_eff = nk
-    m, l, acc = jax.lax.fori_loop(0, nk_eff, body, (m, l, acc))
-    out = acc / jnp.maximum(l, 1e-20)[:, None]
+    m, lsum, acc = jax.lax.fori_loop(0, nk_eff, body, (m, lsum, acc))
+    out = acc / jnp.maximum(lsum, 1e-20)[:, None]
     o_ref[0, 0] = out.astype(o_ref.dtype)
 
 

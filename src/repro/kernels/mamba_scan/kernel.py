@@ -31,22 +31,22 @@ def _mamba_kernel(xb_ref, la_ref, bm_ref, cm_ref, h0_ref,
     cm = cm_ref[0, 0].astype(jnp.float32)            # (L, N)
     h = h_ref[0, 0].astype(jnp.float32)              # (N, P)
 
-    l = jnp.cumsum(la)                               # (L,)
+    lcum = jnp.cumsum(la)                            # (L,)
     # inter-chunk: y_inter[s] = exp(l_s) * C_s . h
     y_inter = jax.lax.dot_general(cm, h, (((1,), (0,)), ((), ()))) \
-        * jnp.exp(l)[:, None]                        # (L, P)
+        * jnp.exp(lcum)[:, None]                     # (L, P)
     # intra-chunk attention form
     cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())))  # (L, L)
-    dec = jnp.exp(l[:, None] - l[None, :])
+    dec = jnp.exp(lcum[:, None] - lcum[None, :])
     ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
     jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
     att = jnp.where(jj <= ii, cb * dec, 0.0)
     y = y_inter + jax.lax.dot_general(att, xb, (((1,), (0,)), ((), ())))
     # state update: h' = exp(l_L) h + sum_t exp(l_L - l_t) B_t xbar_t^T
-    w = jnp.exp(l[-1] - l)                           # (L,)
+    w = jnp.exp(lcum[-1] - lcum)                     # (L,)
     hb = jax.lax.dot_general(bm, xb * w[:, None],
                              (((0,), (0,)), ((), ())))  # (N, P)
-    h_new = jnp.exp(l[-1]) * h + hb
+    h_new = jnp.exp(lcum[-1]) * h + hb
     y_ref[0, 0, 0] = y.astype(y_ref.dtype)
     h_ref[0, 0] = h_new
 

@@ -241,6 +241,33 @@ def update_paged_cache(k_arena, v_arena, k_new, v_new, page_table, pos):
     return k_arena, v_arena
 
 
+def update_paged_cache_window(k_arena, v_arena, k_new, v_new, page_table,
+                              pos, n_tok=None):
+    """Scatter a (B, W, nkv, h) *speculation window* of new K/V into the
+    arena: token m of row b lands at physical page ``page_table[b,
+    (pos[b]+m) // BLOCK]``, offset ``(pos[b]+m) % BLOCK`` — the window may
+    straddle a block boundary, unlike the one-token ``update_paged_cache``
+    or the page-aligned prefill scatter.
+
+    ``n_tok``: optional (B,) int32 count of real tokens per row (draft
+    windows are ragged; dead slot-pool rows carry 0).  Positions at or
+    beyond ``n_tok`` scatter onto the scratch page 0 so pad/dead tokens
+    never touch a live page, and their table lookup is clamped so a row
+    parked near ``max_len`` cannot index past its page table."""
+    B, W = k_new.shape[:2]
+    blk = k_arena.shape[1]
+    n_pg = page_table.shape[1]
+    positions = pos[:, None] + jnp.arange(W)[None]            # (B, W)
+    blocks = jnp.clip(positions // blk, 0, n_pg - 1)
+    phys = jnp.take_along_axis(page_table, blocks, axis=1)    # (B, W)
+    if n_tok is not None:
+        phys = jnp.where(jnp.arange(W)[None] < n_tok[:, None], phys, 0)
+    off = positions % blk
+    k_arena = k_arena.at[phys, off].set(k_new)
+    v_arena = v_arena.at[phys, off].set(v_new)
+    return k_arena, v_arena
+
+
 def paged_decode_attention(cfg, q, k_arena, v_arena, page_table, pos,
                            window: Optional[int] = None, active=None):
     """One-token decode over paged KV.  q: (B, 1, nq, h); arenas:

@@ -306,6 +306,42 @@ def layer_prefill_paged(cfg, spec, p, x, pos0, arena, page_table,
     return x, {"k": ka, "v": va}
 
 
+def layer_verify_paged(cfg, spec, p, x, pos, arena, page_table, n_tok=None):
+    """One speculation-window layer step: scatter the window's K/V by
+    token position (may straddle a block boundary), then attend causally
+    *inside* the window.  x: (B, W, d) with W == spec_k + 1 — row b's
+    window is [committed token, draft_1 .. draft_k] starting at absolute
+    position ``pos[b]``; ``n_tok`` (B,) counts the real tokens per row
+    (ragged drafts; 0 = dead slot) — pad/dead tokens scatter onto the
+    scratch page and their outputs are zeroed.
+
+    Teacher-forced verification: token m's hidden state attends exactly
+    the KV a sequential decode at position pos+m would see (committed
+    pages plus the window's own earlier tokens, just scattered), so the
+    returned logits are the sequential greedy logits for every window
+    position — acceptance is decided on the host by comparing drafts
+    against argmax, and rejected tail KV needs no device rollback: pages
+    are append-only per row and the position mask hides anything beyond
+    the committed position until it is overwritten."""
+    B, W, _ = x.shape
+    positions = pos[:, None] + jnp.arange(W)[None]
+    h = common.apply_norm(cfg, p["norm1"], x)
+    q, k, v = attention.project_qkv(cfg, p["mixer"], h, positions,
+                                    rope=True)
+    ka, va = attention.update_paged_cache_window(
+        arena["k"], arena["v"], k, v, page_table, pos, n_tok=n_tok)
+    active = None if n_tok is None else n_tok > 0
+    o = attention.paged_prefill_attention(cfg, q, ka, va, page_table,
+                                          positions, window=spec.window,
+                                          block_q=64, active=active)
+    h = attention.out_proj(cfg, p["mixer"], o)
+    if cfg.double_norm:
+        h = common.apply_norm(cfg, p["norm1b"], h)
+    x = x + h
+    x, _ = _ffn_block(cfg, spec, p, x)
+    return x, {"k": ka, "v": va}
+
+
 # ==========================================================================
 # Slot-pool cache helpers (continuous batching)
 # ==========================================================================
@@ -590,6 +626,38 @@ class LM:
         x = common.apply_norm(cfg, params["final_norm"], x)
         logits = self._logits(params, x[:, -1])
         return logits, arena
+
+    def verify_paged(self, params, arena, page_tables, tokens, pos,
+                     n_tok=None):
+        """Speculative multi-token verify over the paged pool.
+
+        tokens: (B, W) — per row, the committed next token followed by up
+        to W-1 draft tokens; pos: (B,) absolute position of the window's
+        first token; n_tok: (B,) real tokens per row (ragged drafts, 0 =
+        masked slot).  Extends ``decode_paged`` to a W-token window in ONE
+        dispatch: the window's K/V is scattered by token position (pad and
+        dead rows go to the scratch page) and attention is causal inside
+        the window, so the returned (B, W, V) logits equal W sequential
+        single-token decodes — the scheduler accepts the longest draft
+        prefix matching greedy argmax and rolls back rejected tail KV by
+        simply not advancing the row position (append-only pages)."""
+        cfg = self.cfg
+        B, W = tokens.shape
+        positions = pos[:, None] + jnp.arange(W)[None]
+        x = self._embed(params, tokens, positions)
+
+        def body(x, xs):
+            bp, ar = xs
+            new = []
+            for i, spec in enumerate(cfg.pattern):
+                x, a = layer_verify_paged(cfg, spec, bp[i], x, pos, ar[i],
+                                          page_tables, n_tok=n_tok)
+                new.append(a)
+            return constraints.constrain_batch(x), tuple(new)
+
+        x, arena = jax.lax.scan(body, x, (params["blocks"], arena))
+        x = common.apply_norm(cfg, params["final_norm"], x)
+        return self._logits(params, x), arena
 
     # ---------------- cache scaffolding ----------------
     def cache_zeros(self, B, max_len, T_mem=0):

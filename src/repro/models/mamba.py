@@ -124,21 +124,21 @@ def ssd_scan(cfg, xbar, loga, Bm, Cm, h0=None):
 
     def chunk_step(h, xs):
         xb, la, bm, cm = xs          # (B,L,H,P) (B,L,H) (B,L,N) (B,L,N)
-        l = jnp.cumsum(la, axis=1)   # (B,L,H) inclusive cumulative log decay
+        lcum = jnp.cumsum(la, axis=1)  # (B,L,H) inclusive cum. log decay
         # inter: y_inter[s] = C_s . (exp(l_s) * h)
-        dh = jnp.exp(l)              # decay from chunk start, (B,L,H)
+        dh = jnp.exp(lcum)           # decay from chunk start, (B,L,H)
         y_inter = jnp.einsum("bln,bhnp->blhp", cm, h) * dh[..., None]
         # intra: att[s,t] = (C_s.B_t) exp(l_s - l_t) for t <= s
         cb = jnp.einsum("bsn,btn->bst", cm, bm)[:, None]      # (B,1,S,T)
-        dec = l[:, :, None, :] - l[:, None, :, :]             # (B,S,T,H)
+        dec = lcum[:, :, None, :] - lcum[:, None, :, :]       # (B,S,T,H)
         dec = jnp.transpose(dec, (0, 3, 1, 2))                # (B,H,S,T)
         mask = jnp.tril(jnp.ones((xb.shape[1], xb.shape[1]), bool))
         att = jnp.where(mask[None, None], cb * jnp.exp(dec), 0.0)
         y_intra = jnp.einsum("bhst,bthp->bshp",
                              att.astype(xb.dtype), xb)
         # state update: h' = exp(l_L) h + sum_t exp(l_L - l_t) B_t xbar_t^T
-        lL = l[:, -1]                                          # (B,H)
-        w = jnp.exp(lL[:, None] - l)                           # (B,L,H)
+        lL = lcum[:, -1]                                       # (B,H)
+        w = jnp.exp(lL[:, None] - lcum)                        # (B,L,H)
         hb = jnp.einsum("bln,blhp->bhnp",
                         bm.astype(jnp.float32),
                         (xb.astype(jnp.float32) * w[..., None]))

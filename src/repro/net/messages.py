@@ -29,10 +29,12 @@ SCHEMA = {
 # layer consumes:
 #   kv_usage     int    prefix-cache bytes in use
 #   kv_pressure  float  paged-arena fraction in use (0..1)
+#   spec_accept_rate float  speculative-draft accept fraction (0..1)
 #   sketch       bytes  core/forwarding.PrefixSketch over the node's
 #                       cached block-chain digests (SKETCH_BYTES bloom)
 OPTIONAL = {
     "hr_sync": {"kv_usage": int, "kv_pressure": (int, float),
+                "spec_accept_rate": (int, float),
                 "sketch": (bytes, bytearray)},
 }
 

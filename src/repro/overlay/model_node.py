@@ -109,6 +109,10 @@ class ModelNode:
                # arena in use) — a truer admission signal than slot count,
                # since memory, not rows, is what blocks admission
                "kv_pressure": self._kv_pressure(),
+               # speculative-decode accept rate: how many draft tokens per
+               # verify dispatch this node's engine commits — reported so
+               # routing can become accept-rate-aware (ROADMAP)
+               "spec_accept_rate": self._spec_accept_rate(),
                # block-digest bloom over the serving cache: peers route
                # sibling requests to the deepest sketch hit (prefix
                # affinity) instead of re-prefilling on a load-picked node
@@ -123,6 +127,7 @@ class ModelNode:
         me.active_requests = self.active_requests
         me.hw_score = self.hw_score
         me.kv_pressure = self._kv_pressure()
+        me.spec_accept_rate = self._spec_accept_rate()
         me.prefix_sketch = sketch
 
     def _prefix_sketch(self) -> bytes:
@@ -142,6 +147,14 @@ class ModelNode:
         alloc = eng.allocator
         return alloc.used_count / max(1, alloc.num_pages - 1)
 
+    def _spec_accept_rate(self) -> float:
+        """Speculative-draft accept fraction of the attached real engine
+        (0 when there is none, or it has not drafted yet)."""
+        eng = self.real_engine
+        if eng is None:
+            return 0.0
+        return getattr(eng, "spec_accept_rate", 0.0)
+
     def _handle_sync(self, net, msg):
         nid = msg["from"]
         p = self.peers.setdefault(nid, PeerInfo(nid))
@@ -149,6 +162,7 @@ class ModelNode:
         p.hw_score = msg["hw"]
         p.kv_usage = msg.get("kv_usage", 0)
         p.kv_pressure = msg.get("kv_pressure", 0.0)
+        p.spec_accept_rate = msg.get("spec_accept_rate", 0.0)
         p.prefix_sketch = msg.get("sketch") or None
         self.hrtree.merge_paths(msg["paths"], nid)
 

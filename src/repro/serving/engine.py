@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm import cache_slot_read, cache_slot_write
-from repro.serving.page_pool import OutOfPages, PagedHandle, PageAllocator
+from repro.serving.page_pool import OutOfPages, PageAllocator, PagedHandle
 from repro.serving.prefix_cache import BLOCK, PrefixCache
 
 
@@ -48,6 +48,51 @@ class Result:
     total: float = 0.0
     cached_tokens: int = 0
     prompt_tokens: int = 0
+
+
+class NgramDrafter:
+    """Self-speculative prompt-lookup drafter (no draft model).
+
+    Indexes every n-gram (n <= ``max_n``) of a request's prompt plus its
+    committed generation, mapping it to the position right after its most
+    recent occurrence *that has a continuation*.  ``draft(k)`` matches the
+    longest indexed suffix of the context and proposes the k tokens that
+    followed it last time — fully deterministic, so speculative decode
+    stays token-identical to greedy decoding (drafts are only accepted
+    when they equal the model's own argmax) and CI can gate the accept
+    counters.  Repetitive streams (templates, code, loops — including the
+    model's own greedy cycles) draft well; novel text drafts nothing and
+    the verify window degenerates to a normal one-token decode."""
+
+    __slots__ = ("tokens", "index", "max_n")
+
+    def __init__(self, tokens, max_n: int = 3):
+        self.tokens: list = []
+        self.index: dict = {}
+        self.max_n = max_n
+        self.extend(tokens)
+
+    def extend(self, toks):
+        """Append committed tokens, indexing n-grams as they gain a
+        continuation (an n-gram ending at the stream head has nothing to
+        propose yet, so it is indexed when the next token arrives)."""
+        for t in toks:
+            pos = len(self.tokens)
+            for n in range(1, self.max_n + 1):
+                if pos >= n:
+                    self.index[tuple(self.tokens[pos - n:pos])] = pos
+            self.tokens.append(int(t))
+
+    def draft(self, k: int) -> list:
+        """Up to ``k`` proposed continuation tokens (possibly fewer when
+        the match sits near the stream head; empty on no match)."""
+        if k <= 0:
+            return []
+        for n in range(min(self.max_n, len(self.tokens)), 0, -1):
+            cont = self.index.get(tuple(self.tokens[-n:]))
+            if cont is not None:
+                return self.tokens[cont:cont + k]
+        return []
 
 
 @dataclass
@@ -82,10 +127,20 @@ class RealEngine:
         self.batched_prefill_traces = 0   # compilations of batched admission
         self.prefill_dispatches = 0       # jitted prefill_paged calls issued
         self.prefill_tokens = 0           # real (non-pad) tokens prefilled
+        # speculative decode counters (scheduler-driven verify rounds)
+        self.spec_traces = 0      # compilations of the batched verify
+        self.spec_dispatches = 0  # verify_paged dispatches issued
+        self.spec_tokens = 0      # tokens committed by verify rounds
+        self.spec_drafted = 0     # draft tokens proposed
+        self.spec_accepted = 0    # draft tokens accepted (== model argmax)
         # paged KV pool: pure-attention families only (recurrent mixers
         # have O(1) state — nothing to page)
         self.paged = (model.supports_paging() if paged is None
                       else bool(paged) and model.supports_paging())
+        # speculative decode needs per-position KV to roll back by position
+        # — paged pool only; dense/recurrent engines fall back to one
+        # token per round
+        self.spec = bool(self.paged and cfg.spec_enabled and cfg.spec_k > 0)
         self.block = BLOCK
         if self.paged:
             self.max_pages = -(-max_len // BLOCK)     # table width (ceil)
@@ -143,8 +198,15 @@ class RealEngine:
                 return model.prefill_paged(params, arena, pt, tok, pos0,
                                            active=active)
 
+            def _verify_paged_batched(params, arena, pt, tok, pos, n_tok):
+                self.spec_traces += 1   # trace-time side effect only
+                return model.verify_paged(params, arena, pt, tok, pos,
+                                          n_tok=n_tok)
+
             self._prefill_paged = jax.jit(_prefill_paged,
                                           donate_argnums=donate)
+            self._verify_paged_batched = jax.jit(_verify_paged_batched,
+                                                 donate_argnums=donate)
             self._prefill_paged_batched = jax.jit(_prefill_paged_batched,
                                                   donate_argnums=donate)
             self._decode_paged = jax.jit(_decode_paged,
@@ -158,6 +220,13 @@ class RealEngine:
 
     def _cache_nbytes(self, cache) -> int:
         return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+    @property
+    def spec_accept_rate(self) -> float:
+        """Fraction of proposed draft tokens the model accepted (0 until
+        the first draft) — broadcast by ModelNode alongside kv_pressure."""
+        return (self.spec_accepted / self.spec_drafted
+                if self.spec_drafted else 0.0)
 
     # ------------------------------------------------------------------
     # paged-pool page management (host side)

@@ -52,6 +52,14 @@ class PrefixCache:
         # paged engine hooks this to decref the entry's pages (pages stay
         # physically live while any in-flight request still aliases them)
         self.on_release = None
+        # double-buffered sketch: the live buffer is grown incrementally
+        # on insert (bloom bits are add-only), and an eviction marks it
+        # dirty so the NEXT sketch_bytes() rebuilds from the surviving
+        # chain keys — a sync after eviction never re-broadcasts the
+        # evicted prefix's bits, and the steady state (no eviction since
+        # the last sync) skips the O(entries x depths) rebuild entirely
+        self._sketch = None
+        self._sketch_dirty = True
 
     # ---- lookup ----
     def match(self, tokens: Sequence[int]) -> tuple[int, Optional[Entry]]:
@@ -94,6 +102,9 @@ class PrefixCache:
         length = (len(tokens) // self.block) * self.block
         entry = Entry(handle, length, nbytes, keys=list(chains))
         self.used_bytes += nbytes
+        if self._sketch is not None and not self._sketch_dirty:
+            for key in chains:       # grow the live buffer in place:
+                self._sketch.add(key)    # adding bits never goes stale
         for key in chains:
             old = self._by_chain.get(key)
             if old is not None and old is not entry:
@@ -125,6 +136,9 @@ class PrefixCache:
                 self._by_chain.pop(k)
         e.keys.clear()
         self._release(e)
+        # bloom bits cannot be cleared in place: flip to the rebuild
+        # buffer so the next sketch_bytes() drops the evicted digests
+        self._sketch_dirty = True
 
     def _evict(self):
         if self.used_bytes <= self.max_bytes:
@@ -150,9 +164,18 @@ class PrefixCache:
     def sketch_bytes(self) -> bytes:
         """Serialized bloom fingerprint of this cache's chain digests
         (core/forwarding.PrefixSketch), broadcast in every hr_sync so
-        peers can route sibling requests to the prefix holder."""
+        peers can route sibling requests to the prefix holder.
+
+        Double-buffered for freshness: inserts grow the live buffer
+        incrementally, an eviction marks it dirty and the next call
+        rebuilds from the surviving keys — an evicted prefix stops
+        attracting affinity routes after the next sync instead of
+        lingering as stale bloom bits."""
         from repro.core.forwarding import PrefixSketch
-        return PrefixSketch.build(self._by_chain.keys()).to_bytes()
+        if self._sketch is None or self._sketch_dirty:
+            self._sketch = PrefixSketch.build(self._by_chain.keys())
+            self._sketch_dirty = False
+        return self._sketch.to_bytes()
 
     def cached_prefixes(self) -> list[tuple]:
         """(token-length, entry) view used to build HR-tree broadcasts —

@@ -35,7 +35,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.engine import RealEngine, Request, Result
+from repro.serving.engine import NgramDrafter, RealEngine, Request, Result
 
 
 @dataclass
@@ -47,6 +47,7 @@ class _Slot:
     ttft: float = 0.0
     cached_tokens: int = 0
     pages: list = field(default_factory=list)   # paged engines only
+    drafter: object = None                      # NgramDrafter (spec mode)
 
 
 @dataclass
@@ -66,6 +67,11 @@ class Scheduler:
         self.done: list[Result] = []
         self.metrics = {"admitted": 0, "completed": 0, "queue_peak": 0,
                         "decode_calls": 0, "rounds": 0}
+        # speculative n-gram decode: one multi-token verify dispatch per
+        # round instead of the one-token pool decode (paged engines only;
+        # cfg.spec_enabled/spec_k are serving policy, not arch traits)
+        self.spec = engine.spec
+        self._spec_w = engine.cfg.spec_k + 1 if self.spec else 1
         self._logits = jnp.zeros((max_active, engine.cfg.padded_vocab),
                                  jnp.float32)
         if engine.paged:
@@ -125,7 +131,8 @@ class Scheduler:
         self.slots[free] = _Slot(req, st.pos, t_start=t0,
                                  ttft=time.monotonic() - t0,
                                  cached_tokens=st.matched,
-                                 pages=st.pages or [])
+                                 pages=st.pages or [],
+                                 drafter=self._new_drafter(req))
         self.metrics["admitted"] += 1
 
     def _admit_batch(self):
@@ -151,8 +158,12 @@ class Scheduler:
             self._logits = self._logits.at[slot].set(st.logits[0])
             self.slots[slot] = _Slot(req, st.pos, t_start=t0, ttft=ttft,
                                      cached_tokens=st.matched,
-                                     pages=st.pages or [])
+                                     pages=st.pages or [],
+                                     drafter=self._new_drafter(req))
             self.metrics["admitted"] += 1
+
+    def _new_drafter(self, req: Request):
+        return NgramDrafter(req.tokens) if self.spec else None
 
     # ------------------------------------------------------------------
     def step(self):
@@ -186,7 +197,9 @@ class Scheduler:
         # scratch page) before anything else dispatches.
         for i in finished:
             self._finish_slot(i)
-        if cont:
+        if cont and self.spec:
+            self._verify_round(cont, nxt)
+        elif cont:
             eng = self.engine
             B = self.max_active
             tok = np.zeros((B, 1), np.int32)
@@ -213,6 +226,90 @@ class Scheduler:
             self.metrics["decode_calls"] += 1
             for i in cont:
                 self.slots[i].pos += 1
+
+    # ------------------------------------------------------------------
+    # speculative n-gram decode (paged pool)
+    # ------------------------------------------------------------------
+    def _verify_round(self, cont: list, nxt):
+        """ONE multi-token verify dispatch for every continuing slot.
+
+        Per row the window is [nxt, draft_1 .. draft_k] (k <= spec_k,
+        ragged — rows with no n-gram match carry a bare one-token window)
+        at positions pos .. pos+k.  The dispatch scatters the window's KV
+        into the row's (append-only) pages and returns teacher-forced
+        logits for every window position; the host accepts the longest
+        draft prefix that matches greedy argmax, so outputs are token-
+        identical to non-speculative decoding.  Rollback of rejected tail
+        KV is pure bookkeeping: the row position simply doesn't advance
+        over rejected tokens, the position mask hides their stale KV, and
+        the next window overwrites it."""
+        eng = self.engine
+        B, W = self.max_active, self._spec_w
+        tok = np.zeros((B, W), np.int32)
+        pos = np.zeros((B,), np.int32)
+        ntk = np.zeros((B,), np.int32)
+        drafts: dict = {}
+        for i in cont:
+            s = self.slots[i]
+            dr = s.drafter
+            # feed the drafter every committed token (nxt is already in
+            # s.out): its index covers prompt + generation so far
+            n_new = len(s.req.tokens) + len(s.out) - len(dr.tokens)
+            if n_new > 0:
+                dr.extend(s.out[-n_new:])
+            # drafting past max_new or max_len is wasted verify compute —
+            # the accept loop below could never commit those tokens
+            cap = min(W - 1, s.req.max_new - len(s.out),
+                      eng.max_len - 1 - (s.pos + 1))
+            d = [int(t) for t in dr.draft(cap)]
+            drafts[i] = d
+            eng.spec_drafted += len(d)
+            n = 1 + len(d)
+            tok[i, 0] = nxt[i]
+            tok[i, 1:n] = d
+            pos[i] = s.pos
+            ntk[i] = n
+            eng.ensure_page_for(s.pages, s.pos + n - 1)
+            self._ptab[i, :len(s.pages)] = s.pages
+        logits, eng.arena = eng._verify_paged_batched(
+            eng.params, eng.arena, jnp.asarray(self._ptab),
+            jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(ntk))
+        eng.spec_dispatches += 1
+        self.metrics["decode_calls"] += 1
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))      # (B, W)
+        sel = np.zeros((B,), np.int32)     # per-row next-logits window index
+        keep = np.zeros((B,), bool)
+        finished = []
+        for i in cont:
+            s = self.slots[i]
+            s.pos += 1                     # nxt committed at the old pos
+            accepted = 0
+            done = False
+            for j, t in enumerate(drafts[i]):
+                if t != int(greedy[i, j]):
+                    break                  # rejected: greedy diverged here
+                # accepted draft == the model's own next greedy token;
+                # same append+finish checks a non-spec round would run
+                s.out.append(t)
+                eng.spec_accepted += 1
+                accepted += 1
+                if (t == s.req.eos_id or len(s.out) >= s.req.max_new
+                        or s.pos >= eng.max_len - 1):
+                    done = True            # finishing token: appended but
+                    break                  # its KV position stays unclaimed
+                s.pos += 1
+            eng.spec_tokens += 1 + accepted
+            if done:
+                finished.append(i)
+            else:
+                sel[i] = accepted          # logits after the last committed
+                keep[i] = True             # window token
+        new = jnp.take_along_axis(
+            logits, jnp.asarray(sel)[:, None, None], axis=1)[:, 0]
+        self._logits = jnp.where(jnp.asarray(keep)[:, None], new,
+                                 self._logits)
+        for i in finished:
+            self._finish_slot(i)
 
     def _finish_slot(self, i: int):
         s = self.slots[i]

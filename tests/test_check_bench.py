@@ -1,0 +1,140 @@
+"""CI bench regression gate: tolerance, missing/mismatch, unknown-file
+and --update/--summary paths of scripts/check_bench.py."""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench",
+    Path(__file__).resolve().parent.parent / "scripts" / "check_bench.py")
+cb = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(cb)
+
+
+@pytest.fixture()
+def gate(tmp_path, monkeypatch):
+    """Small synthetic gate: one artifact, two gated keys, one extra."""
+    results = tmp_path / "results"
+    baseline = results / "baseline"
+    results.mkdir()
+    baseline.mkdir()
+    monkeypatch.setattr(cb, "GATED", {"fake_quick.json": ["a.b", "zero"]})
+    monkeypatch.setattr(cb, "SUMMARY_EXTRA",
+                        {"fake_quick.json": ["wall_s"]})
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+
+    def write(dir_, payload):
+        (dir_ / "fake_quick.json").write_text(json.dumps(payload))
+
+    def run(*extra):
+        return cb.main(["--results", str(results),
+                        "--baseline", str(baseline), *extra])
+
+    return results, baseline, write, run
+
+
+def _payload(v=10.0, zero=0.0, wall=1.5):
+    return {"a": {"b": v}, "zero": zero, "wall_s": wall}
+
+
+def test_pass_within_tolerance(gate):
+    results, baseline, write, run = gate
+    write(baseline, _payload(10.0))
+    write(results, _payload(12.0))          # +20% < default ±30%
+    assert run() == 0
+
+
+def test_fail_beyond_tolerance_both_directions(gate, capsys):
+    results, baseline, write, run = gate
+    write(baseline, _payload(10.0))
+    write(results, _payload(15.0))          # +50%
+    assert run() == 1
+    assert "a.b" in capsys.readouterr().err
+    write(results, _payload(4.0))           # -60%: improvements fail too
+    assert run() == 1
+    # tightening/loosening the tolerance flips the verdict
+    write(results, _payload(12.0))
+    assert run("--tol", "0.1") == 1
+    assert run("--tol", "0.3") == 0
+
+
+def test_zero_baseline_is_exact_invariant(gate):
+    results, baseline, write, run = gate
+    write(baseline, _payload(zero=0.0))
+    write(results, _payload(zero=1.0))      # any drift off zero fails
+    assert run() == 1
+    write(results, _payload(zero=0.0))
+    assert run() == 0
+
+
+def test_missing_baseline_fails_with_update_hint(gate, capsys):
+    results, baseline, write, run = gate
+    write(results, _payload())
+    assert run() == 1
+    assert "--update" in capsys.readouterr().err
+
+
+def test_missing_artifact_fails(gate, capsys):
+    results, baseline, write, run = gate
+    write(baseline, _payload())
+    assert run() == 1
+    assert "artifact missing" in capsys.readouterr().err
+
+
+def test_key_missing_from_artifact_or_baseline(gate, capsys):
+    results, baseline, write, run = gate
+    write(baseline, _payload())
+    (results / "fake_quick.json").write_text(json.dumps({"zero": 0.0}))
+    assert run() == 1
+    assert "missing from artifact" in capsys.readouterr().err
+    (baseline / "fake_quick.json").write_text(json.dumps({"zero": 0.0}))
+    write(results, _payload())
+    assert run() == 1
+    assert "not in baseline" in capsys.readouterr().err
+
+
+def test_unknown_quick_artifact_is_hard_failure(gate, capsys):
+    """A quick-bench JSON with no GATED registration must fail the gate
+    (it would otherwise regress silently), pointing at GATED + --update."""
+    results, baseline, write, run = gate
+    write(baseline, _payload())
+    write(results, _payload())
+    (results / "rogue_quick.json").write_text("{}")
+    assert run() == 1
+    err = capsys.readouterr().err
+    assert "rogue_quick.json" in err and "GATED" in err
+    # non-quick JSONs (full-mode artifacts) are not the gate's business
+    (results / "rogue_quick.json").unlink()
+    (results / "fullmode.json").write_text("{}")
+    assert run() == 0
+
+
+def test_update_copies_all_quick_artifacts(gate):
+    results, baseline, write, run = gate
+    write(results, _payload())
+    (results / "rogue_quick.json").write_text("{}")
+    assert run("--update") == 0
+    assert (baseline / "fake_quick.json").exists()
+    assert (baseline / "rogue_quick.json").exists()   # committed alongside
+    (results / "rogue_quick.json").unlink()
+    (baseline / "rogue_quick.json").unlink()
+    assert run() == 0                       # refreshed baseline now gates
+
+
+def test_summary_written_to_step_summary_file(gate, tmp_path, monkeypatch):
+    results, baseline, write, run = gate
+    write(baseline, _payload(10.0))
+    write(results, _payload(20.0, wall=9.9))     # gated fail + extra row
+    dest = tmp_path / "step_summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(dest))
+    assert run("--summary") == 1
+    text = dest.read_text()
+    assert "Quick-bench summary" in text
+    assert "a.b" in text and "+100.0%" in text and "❌" in text
+    assert "wall_s" in text                 # ungated highlight row rides
+    # stdout fallback when the env var is unset
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY")
+    write(results, _payload(10.0))
+    assert run("--summary") == 0

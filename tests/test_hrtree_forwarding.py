@@ -240,6 +240,50 @@ def test_decide_deterministic_across_peer_orderings():
         assert (fwd.target, fwd.reason) == (rev.target, rev.reason)
 
 
+def test_evicted_prefix_stops_attracting_affinity_after_sync():
+    """Sketch freshness (double-buffered bloom): once the holder evicts a
+    prefix, the sketch from its NEXT hr_sync must no longer attract
+    sibling requests — stale bits may only persist until that sync."""
+    from repro.serving.prefix_cache import PrefixCache
+
+    toks = list(range(64))
+    pc = PrefixCache()
+    pc.insert(toks, None, 1024)
+    t = make_tree()
+    peers = {"A": PeerInfo("A", 5, 0, prefix_sketch=pc.sketch_bytes()),
+             "B": PeerInfo("B", 5, 0)}
+    d = decide(ForwardingConfig(), t, peers, toks + [9] * 8)
+    assert d.reason == "affinity" and d.target == "A"
+
+    assert pc.pop_lru()                   # eviction under pressure
+    # pre-sync the stale broadcast still hits (point-in-time bloom) ...
+    assert decide(ForwardingConfig(), t, peers,
+                  toks + [9] * 8).reason == "affinity"
+    # ... but the next sync's sketch has been rebuilt without the entry
+    peers["A"].prefix_sketch = pc.sketch_bytes()
+    d = decide(ForwardingConfig(), t, peers, toks + [9] * 8)
+    assert d.reason != "affinity"
+
+
+def test_sketch_incremental_insert_matches_rebuild():
+    """The incrementally grown live buffer must broadcast the same bits a
+    from-scratch rebuild would, across insert/evict interleavings."""
+    from repro.serving.prefix_cache import PrefixCache
+
+    pc = PrefixCache()
+    streams = [list(range(s, s + 96)) for s in (0, 200, 400)]
+    for toks in streams:
+        pc.insert(toks, None, 64)
+        assert pc.sketch_bytes() == \
+            PrefixSketch.build(pc._by_chain.keys()).to_bytes()
+    pc.pop_lru()
+    assert pc.sketch_bytes() == \
+        PrefixSketch.build(pc._by_chain.keys()).to_bytes()
+    pc.insert(list(range(600, 664)), None, 64)   # insert after rebuild
+    assert pc.sketch_bytes() == \
+        PrefixSketch.build(pc._by_chain.keys()).to_bytes()
+
+
 def test_affinity_disabled_preserves_legacy_paths():
     toks = list(range(128))
     t = _tree_with("A", toks)

@@ -13,8 +13,8 @@ paged KV pool (serving/page_pool.py).  Invariants:
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.serving.page_pool import (NULL_PAGE, OutOfPages, PagedHandle,
-                                     PageAllocator)
+from repro.serving.page_pool import (NULL_PAGE, OutOfPages, PageAllocator,
+                                     PagedHandle)
 
 # an op is ("alloc", n) | ("incref", i) | ("decref", i) where i picks a
 # live page by index modulo the live set

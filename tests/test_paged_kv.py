@@ -14,8 +14,8 @@ import pytest
 from repro.configs import base
 from repro.models.lm import build_model
 from repro.serving.engine import RealEngine, Request
-from repro.serving.page_pool import (NULL_PAGE, OutOfPages, PagedHandle,
-                                     PageAllocator)
+from repro.serving.page_pool import (NULL_PAGE, OutOfPages, PageAllocator,
+                                     PagedHandle)
 from repro.serving.prefix_cache import BLOCK
 from repro.serving.scheduler import Scheduler
 

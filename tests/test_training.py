@@ -11,8 +11,8 @@ from repro.configs import base
 from repro.models.lm import build_model
 from repro.training import checkpoint as ckpt_lib
 from repro.training import compression, optimizer as opt_lib
-from repro.training.data import MarkovCorpus, MixedWorkload, WorkloadGen, \
-    TOOLUSE, poisson_arrivals
+from repro.training.data import (TOOLUSE, MarkovCorpus, MixedWorkload,
+                                 WorkloadGen, poisson_arrivals)
 from repro.training.fault_tolerance import (SimulatedCluster,
                                             StragglerPolicy, SupervisorConfig,
                                             TrainSupervisor)
