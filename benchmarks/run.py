@@ -17,10 +17,10 @@ def main(quick: bool = False) -> None:
     from benchmarks import (bench_affinity, bench_anonymity, bench_cache_hit,
                             bench_churn, bench_clove_latency,
                             bench_confidentiality, bench_credit,
-                            bench_kernels, bench_reputation,
-                            bench_roofline, bench_serving_latency,
-                            bench_spec, bench_throughput,
-                            bench_verification)
+                            bench_kernels, bench_migration,
+                            bench_reputation, bench_roofline,
+                            bench_serving_latency, bench_spec,
+                            bench_throughput, bench_verification)
     suites = [
         ("fig9_anonymity", bench_anonymity),
         ("fig10_confidentiality", bench_confidentiality),
@@ -36,6 +36,7 @@ def main(quick: bool = False) -> None:
         ("roofline", bench_roofline),
         ("affinity_routing", bench_affinity),
         ("spec_decode", bench_spec),
+        ("kv_migration", bench_migration),
     ]
     failures = []
     for name, mod in suites:

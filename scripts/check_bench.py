@@ -60,6 +60,15 @@ GATED = {
         "repetitive.baseline.decode_dispatches",
         "random.spec.dispatches_per_token",
     ],
+    "bench_migration_quick.json": [
+        "replicate.prefill_tokens",
+        "replicate.duplicate_prefill_tokens",
+        "replicate.prefill_dispatches",
+        "replicate.kv_imported_pages",
+        "replicate.kv_fetches",
+        "scratch.duplicate_prefill_tokens",
+        "duplicate_dispatches_saved",
+    ],
 }
 
 # ungated per-artifact highlights for the --summary table (wall-clock
@@ -77,6 +86,11 @@ SUMMARY_EXTRA = {
         "repetitive.spec.tok_s",
         "repetitive.spec.accept_rate",
         "repetitive.dispatch_ratio",
+    ],
+    "bench_migration_quick.json": [
+        "replicate.tok_s",
+        "tok_s_ratio",
+        "replicate.kv_wire_bytes",
     ],
 }
 

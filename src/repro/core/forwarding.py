@@ -24,11 +24,26 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
-SKETCH_BYTES = 64              # bloom filter size (512 bits)
+SKETCH_BYTES = 64              # smallest bloom size on the ladder (512 bits)
 SKETCH_HASHES = 4              # buckets per digest
+# power-of-two ladder: a cache whose live chain-key count outgrows one
+# rung rebuilds its sketch at the next (the hr_sync wire field carries
+# raw bytes, so any rung deserializes); capped so a pathological cache
+# cannot inflate every sync broadcast unboundedly
+SKETCH_LADDER = (64, 128, 256, 512, 1024)
+SKETCH_BITS_PER_KEY = 16       # >= 16 bits/key keeps fp ~ 0.2% at k=4
 
 
-def _sketch_buckets(digest: bytes, m_bits: int = SKETCH_BYTES * 8,
+def sketch_size_for(n_keys: int) -> int:
+    """Smallest ladder size (bytes) holding ``n_keys`` digests at the
+    bounded-fp bit budget; the top rung once the budget can't be met."""
+    for nbytes in SKETCH_LADDER:
+        if n_keys * SKETCH_BITS_PER_KEY <= nbytes * 8:
+            return nbytes
+    return SKETCH_LADDER[-1]
+
+
+def _sketch_buckets(digest: bytes, m_bits: int,
                     k: int = SKETCH_HASHES) -> list[int]:
     """Bucket indices for one chain digest.  Digests are SHA-256 prefixes
     (serving/prefix_cache._chain_hashes) — already uniform, so slicing
@@ -38,38 +53,43 @@ def _sketch_buckets(digest: bytes, m_bits: int = SKETCH_BYTES * 8,
 
 
 class PrefixSketch:
-    """Fixed-size bloom fingerprint over block-chain digests.
+    """Bloom fingerprint over block-chain digests, sized off the ladder.
 
     Built by a model node over its prefix cache's registered chain keys
     (one per BLOCK depth of every cached stream) and broadcast in every
     HR-tree sync; ``decide`` probes it with the request's own chain
-    digests to find the peer holding the longest cached prefix."""
+    digests to find the peer holding the longest cached prefix.
+    ``from_bytes`` accepts any ladder size — the wire field is raw bytes,
+    so peers on different rungs interoperate."""
 
-    __slots__ = ("bits",)
+    __slots__ = ("bits", "nbytes")
 
-    def __init__(self, bits: int = 0):
+    def __init__(self, bits: int = 0, nbytes: int = SKETCH_BYTES):
         self.bits = bits
+        self.nbytes = nbytes
 
     @classmethod
-    def build(cls, digests) -> "PrefixSketch":
-        s = cls()
+    def build(cls, digests, nbytes: Optional[int] = None) -> "PrefixSketch":
+        digests = list(digests)
+        s = cls(nbytes=nbytes or sketch_size_for(len(digests)))
         for d in digests:
             s.add(d)
         return s
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "PrefixSketch":
-        return cls(int.from_bytes(data, "little"))
+        return cls(int.from_bytes(data, "little"), max(len(data), 1))
 
     def to_bytes(self) -> bytes:
-        return self.bits.to_bytes(SKETCH_BYTES, "little")
+        return self.bits.to_bytes(self.nbytes, "little")
 
     def add(self, digest: bytes):
-        for b in _sketch_buckets(digest):
+        for b in _sketch_buckets(digest, self.nbytes * 8):
             self.bits |= 1 << b
 
     def __contains__(self, digest: bytes) -> bool:
-        return all(self.bits >> b & 1 for b in _sketch_buckets(digest))
+        return all(self.bits >> b & 1
+                   for b in _sketch_buckets(digest, self.nbytes * 8))
 
     def hit_depth(self, digests: Sequence[bytes]) -> int:
         """Longest prefix of ``digests`` fully contained in the sketch.
@@ -97,9 +117,10 @@ class PeerInfo:
     # see memory pressure, not just slot occupancy.
     kv_pressure: float = 0.0
     # fraction of speculative draft tokens the peer's engine accepted
-    # (0..1; 0 until it drafts).  Broadcast alongside kv_pressure — an
-    # accept-rate-aware router can prefer peers whose verify rounds commit
-    # multiple tokens per dispatch (reported only for now; see ROADMAP).
+    # (0..1; 0 until it drafts).  Broadcast alongside kv_pressure and
+    # consumed by decide(): decode-heavy requests break load ties toward
+    # the peer committing the most tokens per verify dispatch
+    # (ForwardingConfig.accept_rate_routing).
     spec_accept_rate: float = 0.0
     # serialized PrefixSketch (SKETCH_BYTES bloom over the peer's cached
     # block-chain digests), refreshed by every hr_sync; None until the
@@ -136,14 +157,35 @@ class ForwardingConfig:
     # past ~1 active request per hw point, queueing outweighs the saved
     # prefill and the balancer must take over
     affinity_load_max: float = 1.0
+    # cross-node KV page replication: when every sketch hit is vetoed by
+    # pressure/load, route to the least-loaded eligible peer WITH a fetch
+    # hint (vetoed holder id + hit depth) so the target pulls the prefix
+    # pages over the overlay instead of re-prefilling them — the
+    # kv_pressure signal used in reverse: the holder sheds traffic
+    # without losing the prefix.  Short prefixes re-prefill cheaper than
+    # they ship; ``replicate_min_blocks`` is that floor.
+    replicate: bool = True
+    replicate_min_blocks: int = 2
+    # a holder under extreme arena pressure refuses kv_fetch (the entry
+    # is about to be evicted anyway; the importer just prefills)
+    export_pressure_max: float = 0.98
+    # accept-rate-aware routing: decode-heavy requests (n_out exceeds the
+    # prompt length) break load ties toward peers whose speculative
+    # verify rounds commit more tokens per dispatch — the decode-side
+    # analogue of prefix affinity's prefill-side preference
+    accept_rate_routing: bool = True
 
 
 @dataclass
 class Decision:
     target: object
-    reason: str            # "affinity" | "cache_hit" | "load_balance" | "self"
+    # "affinity" | "replicate" | "cache_hit" | "load_balance" | "self"
+    reason: str
     depth: int = 0
     candidates: tuple = ()
+    # replicate only: the vetoed sketch holder the target should pull
+    # ``depth`` blocks of prefix pages from before admitting the request
+    fetch_from: object = None
 
 
 def _tiebreak(node_id, tokens) -> int:
@@ -153,66 +195,94 @@ def _tiebreak(node_id, tokens) -> int:
     return zlib.crc32(f"{node_id}|{list(tokens[:8])}".encode())
 
 
-def _sketch_affinity(cfg: ForwardingConfig, peers: dict, tokens
-                     ) -> tuple[Optional[PeerInfo], int, tuple]:
-    """Deepest eligible sketch hit across peers, or (None, 0, ()).
-
-    A peer is eligible when its sketch covers at least
-    ``affinity_min_blocks`` leading blocks of the request AND it is not
-    vetoed by memory pressure (``kv_pressure_max``) or relative load
-    (``affinity_load_max``) — affinity must never pile siblings onto a
-    node that would evict the very prefix they came for, or queue them
-    behind a backlog that costs more than the prefill they skip."""
+def _sketch_hits(cfg: ForwardingConfig, peers: dict, tokens) -> list:
+    """(depth, peer) for every sketch covering at least
+    ``affinity_min_blocks`` leading blocks of the request — veto-free;
+    the caller partitions into routable hits and pressure/load-vetoed
+    holders (which the replicate path can still pull pages from)."""
     if not any(p.prefix_sketch for p in peers.values()):
-        return None, 0, ()      # cold start / latency-only overlay: don't
+        return []               # cold start / latency-only overlay: don't
                                 # pay the digest chain for nobody
     # local import: prefix_cache imports nothing from core, so the digest
     # function is reached lazily to keep this module stdlib-only at import
     from repro.serving.prefix_cache import _chain_hashes
     digests = _chain_hashes(tokens)
     if not digests:
-        return None, 0, ()
+        return []
     hits = []
     for p in peers.values():
         sk = p.sketch()
         if sk is None:
             continue
         d = sk.hit_depth(digests)
-        if d < cfg.affinity_min_blocks:
-            continue
-        if p.kv_pressure > cfg.kv_pressure_max:
-            continue
-        if p.relative_load > cfg.affinity_load_max:
-            continue
-        hits.append((d, p))
-    if not hits:
-        return None, 0, ()
-    best_d = max(d for d, _ in hits)
-    cands = [p for d, p in hits if d == best_d]
-    best = min(cands, key=lambda p: (p.relative_load, p.latency_ms,
-                                     _tiebreak(p.node_id, tokens)))
-    return best, best_d, tuple(p.node_id for p in cands)
+        if d >= cfg.affinity_min_blocks:
+            hits.append((d, p))
+    return hits
+
+
+def _affinity_vetoed(cfg: ForwardingConfig, p: PeerInfo) -> bool:
+    """Affinity must never pile siblings onto a node that would evict the
+    very prefix they came for (``kv_pressure_max``), or queue them behind
+    a backlog that costs more than the prefill they skip
+    (``affinity_load_max``)."""
+    return (p.kv_pressure > cfg.kv_pressure_max
+            or p.relative_load > cfg.affinity_load_max)
 
 
 def decide(cfg: ForwardingConfig, hrtree, peers: dict, tokens,
-           self_id=None) -> Decision:
-    """peers: {node_id: PeerInfo} for the whole group (state sync view)."""
+           self_id=None, n_out: int = 0) -> Decision:
+    """peers: {node_id: PeerInfo} for the whole group (state sync view).
+
+    ``n_out`` (expected generation length) makes the load-balance
+    tiebreak accept-rate-aware: a decode-heavy request, whose cost is
+    verify dispatches rather than prefill, breaks load ties toward the
+    peer committing the most draft tokens per dispatch."""
     live = {nid: p for nid, p in peers.items()}
+    decode_heavy = bool(cfg.accept_rate_routing and n_out > len(tokens))
+
+    def rank(p: PeerInfo):
+        # accept rate sorts strictly AFTER load — it breaks ties, never
+        # outvotes the balancer — and before latency/tiebreak so equal-
+        # rate peers keep the exact legacy (deterministic) ordering
+        spec = -p.spec_accept_rate if decode_heavy else 0.0
+        return (p.relative_load, spec, p.latency_ms,
+                _tiebreak(p.node_id, tokens))
+
     if cfg.affinity:
-        best, d_aff, cands = _sketch_affinity(cfg, live, tokens)
-        if best is not None:
-            return Decision(best.node_id, "affinity", d_aff, cands)
+        hits = _sketch_hits(cfg, live, tokens)
+        routable = [(d, p) for d, p in hits
+                    if not _affinity_vetoed(cfg, p)]
+        if routable:
+            best_d = max(d for d, _ in routable)
+            cands = [p for d, p in routable if d == best_d]
+            best = min(cands, key=rank)
+            return Decision(best.node_id, "affinity", best_d,
+                            tuple(p.node_id for p in cands))
+        if cfg.replicate and hits:
+            # every sketch hit is vetoed: instead of silently dropping
+            # the affinity and re-prefilling the hottest prefix on a
+            # load-picked stranger, route to the least-loaded peer that
+            # can HOST the pages and tell it where to pull them from
+            best_d = max(d for d, _ in hits)
+            if best_d >= cfg.replicate_min_blocks:
+                holder = min((p for d, p in hits if d == best_d), key=rank)
+                targets = [p for p in live.values()
+                           if p.node_id != holder.node_id
+                           and not _affinity_vetoed(cfg, p)]
+                if targets:
+                    best = min(targets, key=rank)
+                    return Decision(best.node_id, "replicate", best_d,
+                                    (holder.node_id,),
+                                    fetch_from=holder.node_id)
     holders, depth = hrtree.search_tokens(tokens, cfg.tau_match)
     if holders:
         cands = [live[h] for h in holders if h in live]
         cands = [p for p in cands if p.relative_load <= cfg.load_threshold]
         if cands:
-            best = min(cands, key=lambda p: (p.relative_load, p.latency_ms,
-                                             _tiebreak(p.node_id, tokens)))
+            best = min(cands, key=rank)
             return Decision(best.node_id, "cache_hit", depth,
                             tuple(p.node_id for p in cands))
     if not live:
         return Decision(self_id, "self", depth)
-    best = min(live.values(), key=lambda p: (p.relative_load, p.latency_ms,
-                                             _tiebreak(p.node_id, tokens)))
+    best = min(live.values(), key=rank)
     return Decision(best.node_id, "load_balance", depth)

@@ -342,6 +342,37 @@ def layer_verify_paged(cfg, spec, p, x, pos, arena, page_table, n_tok=None):
     return x, {"k": ka, "v": va}
 
 
+def arena_gather_pages(arena, pages):
+    """Gather physical pages out of a paged arena pytree: every
+    {"k","v"} leaf (R, num_pages, BLOCK, nkv, h) -> (R, n, BLOCK, nkv, h)
+    for the n requested pages, in order.
+
+    The overlay's cross-node page migration uses this to lift a prefix
+    entry's pages into a wire buffer (serving/engine.export_pages) — the
+    same physical-page indexing ``attention.gather_pages`` applies per
+    request, minus the logical-block reshape (wire pages stay
+    block-granular)."""
+    idx = jnp.asarray(pages, jnp.int32)
+    return jax.tree.map(lambda a: a[:, idx], arena)
+
+
+def arena_scatter_pages(arena, pages, blocks):
+    """Inverse of ``arena_gather_pages``: write (R, n, BLOCK, nkv, h)
+    block payloads into freshly allocated physical pages of every arena
+    leaf (cast to the arena dtype — wire payloads may arrive fp16/int8-
+    dequantized).  The caller owns the target pages (refcount 1); aliased
+    pages are never scattered into.  Jit-friendly (``pages`` may be a
+    traced index array): the serving engine wraps it with the arena
+    donated so an import updates pages in place instead of copying the
+    whole node-wide arena."""
+    idx = jnp.asarray(pages, jnp.int32)
+
+    def one(a, b):
+        return a.at[:, idx].set(jnp.asarray(b, a.dtype))
+
+    return jax.tree.map(one, arena, blocks)
+
+
 # ==========================================================================
 # Slot-pool cache helpers (continuous batching)
 # ==========================================================================

@@ -21,6 +21,17 @@ SCHEMA = {
     "response_clove": ("path_id",),
     "fwd_request": ("payload",),
     "hr_sync": ("from", "paths", "active", "hw"),
+    # cross-node KV page migration (overlay/replicator.py): a node routed
+    # a request with a fetch hint pulls the prefix pages from their
+    # holder instead of re-prefilling them.
+    #   kv_fetch   chains: list of BLOCK-chain digests (bytes), depth:
+    #              how many leading blocks the fetcher wants
+    #   kv_pages   ok: False = refusal (entry evicted / holder under
+    #              pressure); True replies stream the msgpacked page
+    #              buffer in ``total`` chunks of ``data`` bytes covering
+    #              ``depth`` blocks (may be shallower than requested)
+    "kv_fetch": ("from", "fetch_id", "chains", "depth"),
+    "kv_pages": ("from", "fetch_id", "ok"),
 }
 
 # optional fields, (name -> accepted types) per message type: absent on
@@ -31,11 +42,17 @@ SCHEMA = {
 #   kv_pressure  float  paged-arena fraction in use (0..1)
 #   spec_accept_rate float  speculative-draft accept fraction (0..1)
 #   sketch       bytes  core/forwarding.PrefixSketch over the node's
-#                       cached block-chain digests (SKETCH_BYTES bloom)
+#                       cached block-chain digests (any ladder size)
+# fwd_request may carry a replicate fetch hint (core/forwarding.decide):
+#   kv_holder    the vetoed sketch holder to pull prefix pages from
+#   kv_depth     int    hit depth in blocks
 OPTIONAL = {
     "hr_sync": {"kv_usage": int, "kv_pressure": (int, float),
                 "spec_accept_rate": (int, float),
                 "sketch": (bytes, bytearray)},
+    "fwd_request": {"kv_holder": (str, bytes, int), "kv_depth": int},
+    "kv_pages": {"seq": int, "total": int, "depth": int,
+                 "data": (bytes, bytearray)},
 }
 
 

@@ -17,8 +17,10 @@ from typing import Optional
 
 from repro.core import ed25519, hrtree, sentry, sida
 from repro.core.forwarding import ForwardingConfig, PeerInfo, decide
+from repro.overlay.replicator import Replicator
 from repro.overlay.user_node import _decode, _encode
 from repro.serving.engine import LatencyEngine, LatencyEngineConfig
+from repro.serving.page_pool import PagedHandle
 
 
 @dataclass
@@ -33,7 +35,8 @@ class ModelNode:
                  fwd_cfg: ForwardingConfig = ForwardingConfig(),
                  chunk_lengths=(64,), sync_every: float = 5.0,
                  real_engine=None, use_crypto: bool = True,
-                 behaviour: str = "honest"):
+                 behaviour: str = "honest", kv_chunk_bytes: int = 1 << 16,
+                 kv_fetch_timeout: float = 30.0):
         self.node_id = node_id
         self.llm = llm
         self.hw_score = hw_score
@@ -70,7 +73,21 @@ class ModelNode:
         self.metrics = {"served": 0, "forwarded_in": 0, "forwarded_out": 0,
                         "cache_hits": 0, "affinity_hits": 0,
                         "ttft": [], "total": [],
-                        "cached_tokens": 0, "prompt_tokens": 0}
+                        "cached_tokens": 0, "prompt_tokens": 0,
+                        # cross-node KV page migration
+                        "replicate_routes": 0,     # decide() chose replicate
+                        "kv_fetches": 0,           # kv_fetch messages sent
+                        "kv_fetch_piggybacks": 0,  # requests joining a fetch
+                        "kv_imported_pages": 0,
+                        "kv_refusals": 0,          # holder said no
+                        "kv_import_failures": 0,   # local OutOfPages
+                        "kv_timeouts": 0,
+                        "kv_fallbacks": 0,         # requests that prefilled
+                        "kv_wire_bytes": 0,        # payload bytes received
+                        "kv_exports": 0,           # fetches served as holder
+                        "kv_export_refused": 0}
+        self.kv_chunk_bytes = kv_chunk_bytes
+        self.replicator = Replicator(self, timeout_s=kv_fetch_timeout)
         self.respond_fn = None              # (tokens)->(out_tokens) override
 
     # ------------------------------------------------------------------
@@ -167,6 +184,49 @@ class ModelNode:
         self.hrtree.merge_paths(msg["paths"], nid)
 
     # ------------------------------------------------------------------
+    # cross-node KV page migration: holder side
+    # ------------------------------------------------------------------
+    def _handle_kv_fetch(self, net, msg):
+        """A peer asks for the prefix pages behind a digest chain.
+
+        Serve the deepest covered prefix as a chunked ``kv_pages`` stream
+        (export is read-only: refcounts and LRU order are untouched, so
+        shipping never blocks local serving).  Refuse when the entry was
+        evicted since the sketch broadcast that attracted the fetch, or
+        when this node's own arena pressure says the entry is about to go
+        — the fetcher then falls back to plain prefill."""
+        src, fid = msg["from"], msg["fetch_id"]
+        eng = self.real_engine
+        chains = [bytes(c) for c in msg["chains"]]
+        depth = min(int(msg["depth"]), len(chains))
+        entry, d_cov = None, 0
+        if (eng is not None and getattr(eng, "paged", False)
+                and self._kv_pressure() <= self.fwd_cfg.export_pressure_max):
+            for d in range(depth, 0, -1):
+                e = eng.prefix_cache.entry_by_chain(chains[d - 1])
+                if (e is not None and isinstance(e.handle, PagedHandle)
+                        and e.length >= d * eng.block
+                        and len(e.handle.pages) >= d):
+                    entry, d_cov = e, d
+                    break
+        if entry is None:
+            self.metrics["kv_export_refused"] += 1
+            net.send(self.node_id, src,
+                     {"type": "kv_pages", "from": self.node_id,
+                      "fetch_id": fid, "ok": False}, size_bytes=64)
+            return
+        blob = _encode(eng.export_pages(entry.handle, depth=d_cov))
+        step = max(1, int(self.kv_chunk_bytes))
+        chunks = [blob[i:i + step] for i in range(0, len(blob), step)]
+        for seq, data in enumerate(chunks):
+            net.send(self.node_id, src,
+                     {"type": "kv_pages", "from": self.node_id,
+                      "fetch_id": fid, "ok": True, "seq": seq,
+                      "total": len(chunks), "depth": d_cov, "data": data},
+                     size_bytes=len(data) + 96)
+        self.metrics["kv_exports"] += 1
+
+    # ------------------------------------------------------------------
     # request path
     # ------------------------------------------------------------------
     def on_message(self, net, src, msg):
@@ -177,7 +237,15 @@ class ModelNode:
             self._handle_sync(net, msg)
         elif mt == "fwd_request":
             self.metrics["forwarded_in"] += 1
-            self._process(net, _decode(msg["payload"]), forwarded=True)
+            hint = None
+            if msg.get("kv_holder") is not None and msg.get("kv_depth"):
+                hint = (msg["kv_holder"], int(msg["kv_depth"]))
+            self._process(net, _decode(msg["payload"]), forwarded=True,
+                          fetch_hint=hint)
+        elif mt == "kv_fetch":
+            self._handle_kv_fetch(net, msg)
+        elif mt == "kv_pages":
+            self.replicator.on_pages(net, msg)
 
     def _handle_clove(self, net, msg):
         clove = sida.Clove.decode(msg["clove"])
@@ -198,7 +266,12 @@ class ModelNode:
             pend.done = True
             self._process(net, _decode(blob))
 
-    def _process(self, net, payload: dict, forwarded: bool = False):
+    def _process(self, net, payload: dict, forwarded: bool = False,
+                 fetch_hint=None):
+        """``fetch_hint`` = (holder_id, depth): pull that many blocks of
+        prefix pages from the holder before serving (set by a replicate-
+        routed fwd_request, or locally when decide() picks self as the
+        replication target)."""
         tokens = payload["prompt"]
         self.sentry.observe(tokens)
         if self.behaviour == "drop":
@@ -210,11 +283,15 @@ class ModelNode:
                 tree = type(self.hrtree)(self.lengths)
                 cfg = dataclasses.replace(self.fwd_cfg, affinity=False)
             d = decide(cfg, tree, self.peers, tokens,
-                       self_id=self.node_id)
+                       self_id=self.node_id,
+                       n_out=int(payload.get("max_new", 64)))
             if d.reason in ("cache_hit", "affinity"):
                 self.metrics["cache_hits"] += 1
             if d.reason == "affinity":
                 self.metrics["affinity_hits"] += 1
+            if d.reason == "replicate":
+                self.metrics["replicate_routes"] += 1
+                fetch_hint = (d.fetch_from, d.depth)
             if d.target is not None and d.target != self.node_id:
                 self.metrics["forwarded_out"] += 1
                 # optimistic load echo: count the in-flight forward against
@@ -223,10 +300,16 @@ class ModelNode:
                 # (the next hr_sync overwrites this with ground truth)
                 if d.target in self.peers:
                     self.peers[d.target].active_requests += 1
-                net.send(self.node_id, d.target,
-                         {"type": "fwd_request", "payload": _encode(payload)},
+                msg = {"type": "fwd_request", "payload": _encode(payload)}
+                if d.reason == "replicate":
+                    msg["kv_holder"] = d.fetch_from
+                    msg["kv_depth"] = int(d.depth)
+                net.send(self.node_id, d.target, msg,
                          size_bytes=len(tokens) * 2 + 128)
                 return
+        if fetch_hint is not None and self.replicator.request(
+                net, payload, fetch_hint[0], fetch_hint[1]):
+            return      # served once the pages land (or the fetch fails)
         self._serve(net, payload)
 
     def _serve(self, net, payload: dict):

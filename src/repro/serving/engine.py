@@ -25,9 +25,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.lm import cache_slot_read, cache_slot_write
+from repro.models.lm import (arena_gather_pages, arena_scatter_pages,
+                             cache_slot_read, cache_slot_write)
 from repro.serving.page_pool import OutOfPages, PageAllocator, PagedHandle
 from repro.serving.prefix_cache import BLOCK, PrefixCache
+from repro.training.compression import (compress_kv_blocks,
+                                        decompress_kv_blocks)
 
 
 @dataclass
@@ -133,6 +136,19 @@ class RealEngine:
         self.spec_tokens = 0      # tokens committed by verify rounds
         self.spec_drafted = 0     # draft tokens proposed
         self.spec_accepted = 0    # draft tokens accepted (== model argmax)
+        self.spec_draftless_rounds = 0  # rounds served by the one-token
+                                        # pool decode (no slot drafted)
+        # cross-node KV page migration counters (overlay Replicator)
+        self.kv_exported_pages = 0   # pages shipped to fetching peers
+        self.kv_imported_pages = 0   # pages scattered in from peers
+        self.kv_export_events = 0
+        self.kv_import_events = 0
+        # wire codec for exported pages (training/compression.py):
+        # "fp16" | "int8" | "raw".  fp16 halves f32 arenas; 16-bit arenas
+        # (bf16) ship raw — same bytes, and a bf16 -> fp16 cast would
+        # overflow |v| > 65504 to inf for zero wire savings
+        self.kv_wire_mode = ("fp16" if cfg.compute_dtype.itemsize == 4
+                             else "raw")
         # paged KV pool: pure-attention families only (recurrent mixers
         # have O(1) state — nothing to page)
         self.paged = (model.supports_paging() if paged is None
@@ -212,6 +228,12 @@ class RealEngine:
             self._decode_paged = jax.jit(_decode_paged,
                                          donate_argnums=donate)
             self._query_paged = jax.jit(_query_paged)
+            # page-import scatter: donate the arena so landing replicated
+            # pages updates in place instead of copying every layer's
+            # whole arena per import (arena is arg 0 here, not arg 1)
+            self._scatter_pages = jax.jit(
+                arena_scatter_pages,
+                donate_argnums=() if not donate else (0,))
             # same attribute as the dense pool decode on purpose: the
             # scheduler (and dispatch-count tests) treat "the one batched
             # decode" uniformly across modes
@@ -276,6 +298,72 @@ class RealEngine:
         if not self.paged:
             return self.prefix_cache.used_bytes
         return self.allocator.used_count * self.page_bytes
+
+    # ------------------------------------------------------------------
+    # cross-node page migration (overlay kv_fetch / kv_pages)
+    # ------------------------------------------------------------------
+    def export_pages(self, handle: PagedHandle, depth: Optional[int] = None,
+                     mode: Optional[str] = None) -> dict:
+        """Gather the first ``depth`` pages of a prefix entry out of the
+        per-layer arenas into a host-side wire buffer.
+
+        Read-only: aliased pages are never mutated and no refcounts move
+        — the holder keeps serving from (and may later evict) the same
+        physical pages while a copy ships.  ``mode`` picks the wire codec
+        (``kv_wire_mode`` default); the buffer is a pure dict of bytes /
+        ints so the overlay can msgpack + chunk it."""
+        assert self.paged, "page export requires the paged pool"
+        if depth is not None:
+            handle = handle.prefix(depth, self.block)
+        pages = list(handle.pages)
+        assert pages, "empty page export"
+        mode = mode or self.kv_wire_mode
+        gathered = arena_gather_pages(self.arena, pages)
+        layers = [{n: compress_kv_blocks(layer[n], mode) for n in ("k", "v")}
+                  for layer in gathered]
+        self.kv_exported_pages += len(pages)
+        self.kv_export_events += 1
+        return {"n_pages": len(pages), "mode": mode, "layers": layers}
+
+    def import_pages(self, buf: dict, chains: list) -> PagedHandle:
+        """Allocate local pages, scatter a peer's exported K/V blocks into
+        the arenas, and register the prefix in ``PrefixCache`` under its
+        BLOCK-chain digests — the next admission aliases it exactly as if
+        this node had prefilled it (zero prefill dispatches for the
+        replicated blocks).
+
+        ``chains`` is the request's digest chain covering the buffer
+        (``chains[i]`` keys blocks 0..i).  Raises ``OutOfPages`` when the
+        arena cannot host the pages even after LRU eviction; any pages
+        allocated before the failure are released — a failed import
+        leaves allocator and arena exactly as they were, and the caller
+        falls back to plain prefill."""
+        assert self.paged, "page import requires the paged pool"
+        n = int(buf["n_pages"])
+        chains = list(chains)[:n]
+        if n < 1 or len(chains) < n:
+            raise ValueError(f"import of {n} pages with {len(chains)} "
+                             f"chain digests")
+        pages = self.alloc_pages(n)
+        try:
+            dtype = self.cfg.compute_dtype
+            blocks = tuple(
+                {name: decompress_kv_blocks(layer[name], dtype)
+                 for name in ("k", "v")}
+                for layer in buf["layers"])
+            self.arena = self._scatter_pages(
+                self.arena, jnp.asarray(pages, jnp.int32), blocks)
+        except BaseException:
+            self.allocator.decref(pages)     # released, never registered
+            raise
+        handle = PagedHandle(tuple(pages), n * self.block)
+        # the pages' initial reference becomes the cache entry's (its
+        # on_release decref balances the alloc above)
+        self.prefix_cache.insert_chains(chains, handle,
+                                        n * self.page_bytes)
+        self.kv_imported_pages += n
+        self.kv_import_events += 1
+        return handle
 
     # ------------------------------------------------------------------
     # admission

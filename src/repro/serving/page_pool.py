@@ -12,6 +12,13 @@ Physical page 0 is reserved as a scratch ("null") page: inactive slot-pool
 rows point their page tables at it so the single batched decode dispatch
 has somewhere harmless to scatter masked rows' K/V — it is never allocated
 and never read unmasked.
+
+Pages also migrate ACROSS nodes (overlay kv_fetch/kv_pages): an export is
+a read-only gather — no refcount moves on the holder — while an import
+allocates fresh local pages whose initial reference is owned by the
+importer's prefix-cache entry; a failed import releases every page it
+allocated, so allocator invariants hold on both ends of the wire
+(tests/test_page_pool_props.py).
 """
 from __future__ import annotations
 
@@ -33,6 +40,17 @@ class PagedHandle:
     bytes live in the engine's arena and are never copied."""
     pages: tuple
     length: int               # tokens covered (block-aligned)
+
+    def prefix(self, depth: int, block: int) -> "PagedHandle":
+        """The handle's leading ``depth`` blocks as a new handle (pure
+        index slice, no refcount movement).  Cross-node page migration
+        exports by prefix: a ``kv_fetch`` may cover fewer blocks than the
+        entry holds, and chain digests guarantee only the LEADING blocks
+        match the request."""
+        if not 1 <= depth <= len(self.pages):
+            raise ValueError(f"depth {depth} of {len(self.pages)} pages")
+        return PagedHandle(self.pages[:depth],
+                           min(self.length, depth * block))
 
 
 class PageAllocator:

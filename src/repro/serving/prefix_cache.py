@@ -94,22 +94,51 @@ class PrefixCache:
                 return min(d * self.block, e.length), e
         return 0, None
 
+    def entry_by_chain(self, digest: bytes) -> Optional[Entry]:
+        """Entry registered under one chain digest, or None.  Read-only:
+        no hit/miss counters, no LRU touch — the overlay's ``kv_fetch``
+        handler probes by digest to decide whether a peer's replication
+        request can still be served (the entry may have been evicted
+        since the sketch broadcast that attracted the fetch)."""
+        return self._by_chain.get(digest)
+
     # ---- insert ----
     def insert(self, tokens: Sequence[int], handle, nbytes: int):
         chains = _chain_hashes(tokens, self.block)
+        length = (len(tokens) // self.block) * self.block
+        self.insert_chains(chains, handle, nbytes, length)
+
+    def insert_chains(self, chains: Sequence[bytes], handle, nbytes: int,
+                      length: Optional[int] = None):
+        """Insert an entry keyed by pre-computed BLOCK-chain digests.
+
+        The cross-node page-migration importer lands here: ``kv_fetch``
+        carried the request's digest chain, the holder's ``kv_pages``
+        reply covers a prefix of it, and the importer registers the
+        freshly scattered pages under those same digests — so the next
+        admission's ``match`` aliases them with zero prefill work, exactly
+        as if this node had prefilled the prefix itself."""
+        chains = list(chains)
         if not chains:
             return
-        length = (len(tokens) // self.block) * self.block
+        length = (len(chains) * self.block) if length is None else length
         entry = Entry(handle, length, nbytes, keys=list(chains))
         self.used_bytes += nbytes
-        if self._sketch is not None and not self._sketch_dirty:
-            for key in chains:       # grow the live buffer in place:
-                self._sketch.add(key)    # adding bits never goes stale
         for key in chains:
             old = self._by_chain.get(key)
             if old is not None and old is not entry:
                 self._unlink(old, key)
             self._by_chain[key] = entry
+        if self._sketch is not None and not self._sketch_dirty:
+            from repro.core.forwarding import sketch_size_for
+            if sketch_size_for(len(self._by_chain)) != self._sketch.nbytes:
+                # key count crossed a ladder rung: the live buffer is now
+                # undersized for the bounded-fp target — rebuild at the
+                # next sync instead of growing stale bits in place
+                self._sketch_dirty = True
+            else:
+                for key in chains:   # grow the live buffer in place:
+                    self._sketch.add(key)    # adding bits never goes stale
         self._evict()
 
     def _release(self, e: Entry):
@@ -170,7 +199,12 @@ class PrefixCache:
         incrementally, an eviction marks it dirty and the next call
         rebuilds from the surviving keys — an evicted prefix stops
         attracting affinity routes after the next sync instead of
-        lingering as stale bloom bits."""
+        lingering as stale bloom bits.  The rebuild picks its size from
+        the power-of-two ladder (``forwarding.sketch_size_for``) by live
+        key count, so the false-positive rate stays bounded under churny
+        working sets instead of saturating a fixed 64-byte bloom; an
+        insert that crosses a ladder rung marks the live buffer dirty the
+        same way an eviction does."""
         from repro.core.forwarding import PrefixSketch
         if self._sketch is None or self._sketch_dirty:
             self._sketch = PrefixSketch.build(self._by_chain.keys())

@@ -197,40 +197,78 @@ class Scheduler:
         # scratch page) before anything else dispatches.
         for i in finished:
             self._finish_slot(i)
-        if cont and self.spec:
-            self._verify_round(cont, nxt)
-        elif cont:
-            eng = self.engine
-            B = self.max_active
-            tok = np.zeros((B, 1), np.int32)
-            pos = np.zeros((B,), np.int32)
-            act = np.zeros((B,), bool)
-            for i in cont:
-                tok[i, 0] = nxt[i]
-                pos[i] = self.slots[i].pos
-                act[i] = True
-                if eng.paged:
-                    # the write position may cross into a new block: grow
-                    # the slot's pages before the single pool dispatch
-                    s = self.slots[i]
-                    eng.ensure_page_for(s.pages, s.pos)
-                    self._ptab[i, :len(s.pages)] = s.pages
+        if not cont:
+            return
+        if self.spec:
+            drafts = self._collect_drafts(cont)
+            if any(drafts.values()):
+                self._verify_round(cont, nxt, drafts)
+                return
+            # no slot drafted: the full (B, W, V) verify window would
+            # commit exactly one token per row anyway — issue the cached
+            # one-token pool decode instead (one extra cached trace, a
+            # W-times smaller dispatch on novel text)
+            self.engine.spec_draftless_rounds += 1
+        self._decode_round(cont, nxt)
+
+    def _decode_round(self, cont: list, nxt):
+        """ONE one-token batched decode dispatch for the continuing rows
+        (the non-speculative pool round, and the speculative scheduler's
+        draft-less fallback)."""
+        eng = self.engine
+        B = self.max_active
+        tok = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        act = np.zeros((B,), bool)
+        for i in cont:
+            tok[i, 0] = nxt[i]
+            pos[i] = self.slots[i].pos
+            act[i] = True
             if eng.paged:
-                self._logits, eng.arena = eng._decode_batched(
-                    eng.params, eng.arena, jnp.asarray(self._ptab),
-                    jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(act))
-            else:
-                self._logits, self._cache = eng._decode_batched(
-                    eng.params, self._cache,
-                    jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(act))
-            self.metrics["decode_calls"] += 1
-            for i in cont:
-                self.slots[i].pos += 1
+                # the write position may cross into a new block: grow
+                # the slot's pages before the single pool dispatch
+                s = self.slots[i]
+                eng.ensure_page_for(s.pages, s.pos)
+                self._ptab[i, :len(s.pages)] = s.pages
+        if eng.paged:
+            self._logits, eng.arena = eng._decode_batched(
+                eng.params, eng.arena, jnp.asarray(self._ptab),
+                jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(act))
+        else:
+            self._logits, self._cache = eng._decode_batched(
+                eng.params, self._cache,
+                jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(act))
+        self.metrics["decode_calls"] += 1
+        for i in cont:
+            self.slots[i].pos += 1
 
     # ------------------------------------------------------------------
     # speculative n-gram decode (paged pool)
     # ------------------------------------------------------------------
-    def _verify_round(self, cont: list, nxt):
+    def _collect_drafts(self, cont: list) -> dict:
+        """Feed each continuing slot's drafter and collect its proposal
+        (possibly empty).  Separated from the verify dispatch so a round
+        where NO slot drafted can fall back to the one-token pool decode
+        instead of paying the full (B, W, V) verify window."""
+        eng, W = self.engine, self._spec_w
+        drafts: dict = {}
+        for i in cont:
+            s = self.slots[i]
+            dr = s.drafter
+            # feed the drafter every committed token (nxt is already in
+            # s.out): its index covers prompt + generation so far
+            n_new = len(s.req.tokens) + len(s.out) - len(dr.tokens)
+            if n_new > 0:
+                dr.extend(s.out[-n_new:])
+            # drafting past max_new or max_len is wasted verify compute —
+            # the accept loop below could never commit those tokens
+            cap = min(W - 1, s.req.max_new - len(s.out),
+                      eng.max_len - 1 - (s.pos + 1))
+            drafts[i] = [int(t) for t in dr.draft(cap)]
+            eng.spec_drafted += len(drafts[i])
+        return drafts
+
+    def _verify_round(self, cont: list, nxt, drafts: dict):
         """ONE multi-token verify dispatch for every continuing slot.
 
         Per row the window is [nxt, draft_1 .. draft_k] (k <= spec_k,
@@ -248,22 +286,9 @@ class Scheduler:
         tok = np.zeros((B, W), np.int32)
         pos = np.zeros((B,), np.int32)
         ntk = np.zeros((B,), np.int32)
-        drafts: dict = {}
         for i in cont:
             s = self.slots[i]
-            dr = s.drafter
-            # feed the drafter every committed token (nxt is already in
-            # s.out): its index covers prompt + generation so far
-            n_new = len(s.req.tokens) + len(s.out) - len(dr.tokens)
-            if n_new > 0:
-                dr.extend(s.out[-n_new:])
-            # drafting past max_new or max_len is wasted verify compute —
-            # the accept loop below could never commit those tokens
-            cap = min(W - 1, s.req.max_new - len(s.out),
-                      eng.max_len - 1 - (s.pos + 1))
-            d = [int(t) for t in dr.draft(cap)]
-            drafts[i] = d
-            eng.spec_drafted += len(d)
+            d = drafts[i]
             n = 1 + len(d)
             tok[i, 0] = nxt[i]
             tok[i, 1:n] = d

@@ -190,20 +190,28 @@ def test_affinity_miss_falls_back_to_load_routing():
 def test_affinity_saturated_sketch_vetoed_by_load():
     """Worst-case bloom false positive — a saturated sketch 'hits' every
     prefix — must still be subject to the load veto: an overloaded
-    claimant never captures traffic on sketch evidence alone."""
+    claimant never captures the traffic itself.  With replication it is
+    named as a fetch source instead (a false positive there only costs a
+    refused kv_fetch); with replication off, the legacy load-balance
+    fallback is byte-identical."""
     toks = list(range(64))
     t = make_tree()
     saturated = b"\xff" * len(_sketch_of(toks))
     peers = {"A": PeerInfo("A", 5, 100, prefix_sketch=saturated),
              "B": PeerInfo("B", 5, 1)}
     d = decide(ForwardingConfig(load_threshold=4.0), t, peers, toks)
+    assert d.reason == "replicate" and d.target == "B"
+    assert d.fetch_from == "A"
+    d = decide(ForwardingConfig(load_threshold=4.0, replicate=False),
+               t, peers, toks)
     assert d.reason == "load_balance" and d.target == "B"
 
 
 def test_kv_pressure_vetoes_affinity_hit():
     """A true sketch hit on a node whose paged arena is nearly full must
-    fall back — co-routing a sibling there would evict the very prefix
-    it came for."""
+    not co-route the sibling there (it would evict the very prefix it
+    came for) — instead the request goes to a peer with headroom carrying
+    a fetch hint naming the pressured holder."""
     toks = list(range(64)) + [3] * 8
     t = make_tree()
     holder = PeerInfo("A", 5, 0, prefix_sketch=_sketch_of(toks[:64]),
@@ -211,11 +219,46 @@ def test_kv_pressure_vetoes_affinity_hit():
     other = PeerInfo("B", 5, 0)
     cfg = ForwardingConfig(kv_pressure_max=0.85)
     d = decide(cfg, t, {"A": holder, "B": other}, toks)
+    assert d.reason == "replicate" and d.target == "B"
+    assert d.fetch_from == "A" and d.depth == 2
+    cfg_off = ForwardingConfig(kv_pressure_max=0.85, replicate=False)
+    d = decide(cfg_off, t, {"A": holder, "B": other}, toks)
     assert d.reason == "load_balance" and d.target == "B"
     # drop the pressure below the threshold: the hit is honored again
     holder.kv_pressure = 0.5
     d = decide(cfg, t, {"A": holder, "B": other}, toks)
     assert d.reason == "affinity" and d.target == "A"
+
+
+def test_replicate_min_blocks_gate():
+    """A vetoed hit shallower than ``replicate_min_blocks`` re-prefills
+    (shipping one block costs more than recomputing it) — and a depth-2
+    hit replicates under the default gate."""
+    t = make_tree()
+    shallow = list(range(32)) + [9] * 8               # 1 block cached
+    holder = PeerInfo("A", 5, 0, prefix_sketch=_sketch_of(shallow[:32]),
+                      kv_pressure=0.95)
+    other = PeerInfo("B", 5, 0)
+    cfg = ForwardingConfig()
+    d = decide(cfg, t, {"A": holder, "B": other}, shallow)
+    assert d.reason == "load_balance"
+    deep = list(range(64)) + [9] * 8                  # 2 blocks cached
+    holder.prefix_sketch = _sketch_of(deep[:64])
+    d = decide(cfg, t, {"A": holder, "B": other}, deep)
+    assert d.reason == "replicate" and d.depth == 2
+
+
+def test_replicate_needs_an_eligible_target():
+    """When every non-holder peer is itself vetoed (pressure/load), there
+    is nowhere to host the pages — the decision degrades to the legacy
+    load-balance fallback instead of bouncing pages into a full arena."""
+    toks = list(range(64)) + [1] * 8
+    t = make_tree()
+    holder = PeerInfo("A", 5, 0, prefix_sketch=_sketch_of(toks[:64]),
+                      kv_pressure=0.95)
+    full_b = PeerInfo("B", 5, 0, kv_pressure=0.99)
+    d = decide(ForwardingConfig(), t, {"A": holder, "B": full_b}, toks)
+    assert d.reason == "load_balance" and d.fetch_from is None
 
 
 def test_decide_deterministic_across_peer_orderings():
@@ -291,3 +334,95 @@ def test_affinity_disabled_preserves_legacy_paths():
              "B": PeerInfo("B", 5, 0)}
     d = decide(ForwardingConfig(affinity=False), t, peers, toks)
     assert d.reason == "cache_hit" and d.target == "A"
+
+
+# --------------------------------------------- accept-rate-aware routing
+def test_accept_rate_breaks_load_ties_for_decode_heavy():
+    """Equal-load peers: a decode-heavy request (n_out exceeds the
+    prompt) goes to the higher speculative accept rate — its cost is
+    verify dispatches, and that peer commits more tokens per dispatch."""
+    toks = [4] * 16
+    t = make_tree()
+    peers = {"A": PeerInfo("A", 5, 2, spec_accept_rate=0.1),
+             "B": PeerInfo("B", 5, 2, spec_accept_rate=0.8)}
+    d = decide(ForwardingConfig(), t, peers, toks, n_out=64)
+    assert d.reason == "load_balance" and d.target == "B"
+    # prompt-heavy request: accept rate is ignored, the legacy
+    # latency/tiebreak ordering decides
+    ref = decide(ForwardingConfig(accept_rate_routing=False), t, peers,
+                 toks, n_out=64)
+    d = decide(ForwardingConfig(), t, peers, toks, n_out=4)
+    assert (d.target, d.reason) == (ref.target, ref.reason)
+
+
+def test_accept_rate_never_outvotes_load():
+    """The accept rate only breaks TIES: a less-loaded low-accept peer
+    still wins over a busier high-accept one."""
+    toks = [4] * 8
+    t = make_tree()
+    peers = {"A": PeerInfo("A", 5, 1, spec_accept_rate=0.0),
+             "B": PeerInfo("B", 5, 3, spec_accept_rate=0.9)}
+    d = decide(ForwardingConfig(), t, peers, toks, n_out=64)
+    assert d.target == "A"
+
+
+def test_accept_rate_tie_is_deterministic():
+    """Equal accept rates at equal load: the decision must match the
+    accept-rate-blind path exactly and be stable across peer orderings
+    (no flapping between syncs)."""
+    t = make_tree()
+
+    def mk(order, rate):
+        peers = {}
+        for nid in order:
+            peers[nid] = PeerInfo(nid, 5, 1, spec_accept_rate=rate)
+        return peers
+
+    cfg = ForwardingConfig()
+    blind = ForwardingConfig(accept_rate_routing=False)
+    for seed in range(20):
+        q = [seed] * 24
+        fwd = decide(cfg, t, mk(["A", "B", "C"], 0.5), q, n_out=64)
+        rev = decide(cfg, t, mk(["C", "B", "A"], 0.5), q, n_out=64)
+        ref = decide(blind, t, mk(["A", "B", "C"], 0.5), q, n_out=64)
+        assert (fwd.target, fwd.reason) == (rev.target, rev.reason)
+        assert (fwd.target, fwd.reason) == (ref.target, ref.reason)
+
+
+# --------------------------------------------------- sketch size ladder
+def test_sketch_size_ladder():
+    from repro.core.forwarding import (SKETCH_LADDER, sketch_size_for)
+    assert sketch_size_for(0) == 64 and sketch_size_for(32) == 64
+    assert sketch_size_for(33) == 128
+    assert sketch_size_for(10_000) == SKETCH_LADDER[-1]
+    # ladder must be monotone powers of two
+    assert all(b == 2 * a for a, b in zip(SKETCH_LADDER, SKETCH_LADDER[1:]))
+
+
+def test_sketch_scales_with_cache_size_and_interops():
+    """A churny cache outgrows the 64-byte rung: the broadcast sketch
+    steps up the ladder, ``from_bytes`` accepts the larger buffer, and
+    hit depths stay exact for cached streams at every size."""
+    from repro.serving.prefix_cache import PrefixCache
+
+    pc = PrefixCache()
+    streams = [list(range(s, s + 96)) for s in range(0, 2000, 100)]
+    sizes = set()
+    for toks in streams:
+        pc.insert(toks, None, 64)
+        raw = pc.sketch_bytes()
+        sizes.add(len(raw))
+        sk = PrefixSketch.from_bytes(raw)
+        # every cached stream still hits at full depth through the wire
+        assert sk.hit_depth(_chain_hashes(toks)) == 3
+        # incremental growth stays equal to a from-scratch rebuild at
+        # the same rung (the PR-4 invariant, now per ladder size)
+        assert raw == PrefixSketch.build(pc._by_chain.keys()).to_bytes()
+    assert len(sizes) > 1 and 64 in sizes            # it actually stepped
+    # peers on different rungs interoperate inside one decide() call
+    t = make_tree()
+    small = PrefixSketch.build(_chain_hashes(streams[0])).to_bytes()
+    peers = {"A": PeerInfo("A", 5, 0, prefix_sketch=small),
+             "B": PeerInfo("B", 5, 0, prefix_sketch=pc.sketch_bytes())}
+    d = decide(ForwardingConfig(), t, peers, streams[-1] + [7] * 8)
+    assert d.reason == "affinity" and d.target == "B" and d.depth == 3

@@ -154,36 +154,74 @@ def test_spec_with_prefix_cache_hit(gt):
 
 
 # ---------------------------------------------------------- dispatch count
-def test_step_issues_exactly_one_verify_dispatch(gt):
-    """Every scheduler round in spec mode is ONE verify dispatch for the
-    whole pool, never a per-request decode, across all occupancies."""
+def test_step_issues_exactly_one_pool_dispatch(gt):
+    """Every scheduler round in spec mode is ONE pool dispatch — the
+    verify window when any slot drafted, the cached one-token pool decode
+    when none did — never a per-request decode, across all occupancies."""
     eng = _spec_engine(gt, max_len=128)
     s = Scheduler(eng, max_active=3)
     for i in range(3):
         s.submit(Request(i, [7, 2] * 6 + [i], max_new=9, eos_id=-1))
-    s.step()               # admissions + first verify round
+    s.step()               # admissions + first pool round
     assert len(s.active) == 3
 
-    verify_calls = []
+    pool_calls = []
     real_verify = eng._verify_paged_batched
-    eng._verify_paged_batched = lambda *a: (verify_calls.append(1)
+    eng._verify_paged_batched = lambda *a: (pool_calls.append("verify")
                                             or real_verify(*a))
+    real_decode = eng._decode_batched
+    eng._decode_batched = lambda *a: (pool_calls.append("fallback")
+                                      or real_decode(*a))
 
     def _no_single(*a):    # pragma: no cover - failure path
-        raise AssertionError("non-verify decode dispatched from step()")
+        raise AssertionError("per-request decode dispatched from step()")
     eng._decode_paged = _no_single
-    eng._decode_batched = _no_single
 
     while s.active:
-        n0 = len(verify_calls)
+        n0 = len(pool_calls)
         s.step()
-        made = len(verify_calls) - n0
-        # exactly one pool verify whenever any slot survives the round,
+        made = len(pool_calls) - n0
+        # exactly one pool dispatch whenever any slot survives the round,
         # zero when the round retires every remaining slot
         assert made == (1 if s.active else 0)
     assert s.metrics["completed"] == 3
     assert eng.spec_traces == 1
-    assert eng.spec_dispatches == s.metrics["decode_calls"]
+    assert (eng.spec_dispatches + eng.spec_draftless_rounds
+            == s.metrics["decode_calls"])
+
+
+def test_draftless_round_falls_back_to_pool_decode(gt):
+    """A round where NO slot drafted must issue the cached one-token pool
+    decode instead of the full (B, spec_k+1, V) verify dispatch: exactly
+    two cached traces total (one verify window + one pool decode), and
+    outputs stay token-identical to the non-speculative scheduler."""
+    cfg, model, params = gt
+    # pseudo-random prompts draft nothing at first (novel text), the
+    # repetitive one drafts well: the run must mix fallback and verify
+    # rounds in one pool
+    prompts = [[(29 * (i + 1) + j) % cfg.vocab for j in range(17 + 5 * i)]
+               for i in range(2)] + [[5, 9, 2, 7] * 10]
+    ref_eng = RealEngine(cfg, model, params, max_len=128)
+    s0 = Scheduler(ref_eng, max_active=3)
+    for i, p in enumerate(prompts):
+        s0.submit(Request(i, p, max_new=16))
+    ref = {r.req_id: r.output for r in s0.run()}
+
+    eng = _spec_engine(gt, max_len=128)
+    s1 = Scheduler(eng, max_active=3)
+    for i, p in enumerate(prompts):
+        s1.submit(Request(i, p, max_new=16))
+    out = {r.req_id: r.output for r in s1.run()}
+    assert out == ref
+    assert eng.spec_draftless_rounds > 0          # fallback really fired
+    assert eng.spec_dispatches > 0                # and so did verify
+    # exactly two cached traces: the verify window and the one-token pool
+    # decode — occupancy changes never recompile either
+    assert eng.spec_traces == 1
+    assert eng.batched_traces == 1
+    assert (eng.spec_dispatches + eng.spec_draftless_rounds
+            == s1.metrics["decode_calls"])
+    eng.allocator.check()
 
 
 def test_spec_disabled_by_default(gt):
